@@ -1,0 +1,107 @@
+"""Faces benchmark worker (runs in its own process so it can claim fake
+devices). Prints one CSV line: name,us_per_call,derived.
+
+  us_per_call — measured wall-clock per Faces inner-loop iteration on this
+                CPU container (host-dispatch overheads are real; network
+                latencies are not).
+  derived     — critical-path time from the calibrated schedule simulator
+                with paper-like cost constants (core/throttle.py), i.e. the
+                number to compare against the paper's relative claims.
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grid", default="2,2,2")
+    ap.add_argument("--block", type=int, default=8)
+    ap.add_argument("--niter", type=int, default=10)
+    ap.add_argument("--mode", default="st", choices=["st", "host"])
+    ap.add_argument("--throttle", default="adaptive")
+    ap.add_argument("--merged", type=int, default=1)
+    ap.add_argument("--ordered", type=int, default=0,
+                    help="P2P message-matching serialization")
+    ap.add_argument("--overlap", type=int, default=0,
+                    help="enqueue an independent compute kernel per iter")
+    ap.add_argument("--resources", type=int, default=16)
+    ap.add_argument("--name", default=None)
+    args = ap.parse_args()
+
+    grid = tuple(int(x) for x in args.grid.split(","))
+    ndev = 1
+    for g in grid:
+        ndev *= g
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={ndev}")
+
+    import time
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import STStream, halo
+    from repro.core.throttle import (CostModel, SimOp, faces_sim_ops,
+                                     simulate)
+    from repro.launch.mesh import make_mesh
+
+    N = (args.block,) * 3
+    mesh = make_mesh(grid, ("x", "y", "z"))
+
+    def build():
+        stream = STStream(mesh, ("x", "y", "z"))
+        win = halo.create_faces_window(stream, N)
+        kern = halo.make_faces_kernels(N)
+        state = stream.allocate()
+        for it in range(args.niter):
+            halo.enqueue_faces_iteration(stream, win, N, kern,
+                                         merged=bool(args.merged))
+            if args.overlap:
+                # independent compute kernel (separate buffer, no deps on
+                # the exchange) — paper §6.7
+                stream.launch(lambda a: a @ a, [win.qual("overlapbuf")],
+                              [win.qual("overlapbuf")], label="overlap")
+        return stream, win, state
+
+    if args.overlap:
+        # add an independent square buffer to the window
+        orig_create = halo.create_faces_window
+
+        def create_with_overlap(stream, n, name="faces"):
+            win = orig_create(stream, n, name)
+            win.buffers["overlapbuf"] = ((64, 64), jnp.float32)
+            return win
+        halo.create_faces_window = create_with_overlap
+
+    stream, win, state = build()
+
+    def run_once(st):
+        return stream.synchronize(
+            st, mode=args.mode, throttle=args.throttle,
+            resources=args.resources, merged=bool(args.merged),
+            donate=False, ordered=bool(args.ordered))
+
+    state = run_once(state)              # warm-up (compiles)
+    reps = int(os.environ.get("FACES_REPS", "1"))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        state = run_once(state)
+    dt = (time.perf_counter() - t0) / reps
+    us_per_iter = dt / args.niter * 1e6
+
+    # derived: calibrated simulator on paper-like constants
+    nbytes = int(np.mean([halo.surface_size(N, d)
+                          for d in halo.DIRECTIONS]) * 4)
+    ops = faces_sim_ops(args.niter, nbytes, merged=bool(args.merged))
+    policy = args.throttle if args.mode == "st" else "application"
+    derived = simulate(ops, policy, args.resources, CostModel(),
+                       merged=bool(args.merged),
+                       host_orchestrated=(args.mode == "host")) / args.niter
+
+    name = args.name or (f"faces_{args.mode}_{args.throttle}"
+                         f"_m{args.merged}_o{args.ordered}_{ndev}r")
+    print(f"{name},{us_per_iter:.1f},{derived:.2f}")
+
+
+if __name__ == "__main__":
+    main()

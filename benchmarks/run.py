@@ -1,0 +1,159 @@
+"""Benchmark harness — one section per paper figure. Prints
+``name,us_per_call,derived`` CSV (derived = calibrated-simulator critical
+path per iteration in us for Faces benches; roofline fraction for dry-run
+rows; tokens/s for throughput rows).
+
+Sections:
+  fig12  Faces overall: ST vs host-orchestrated active RMA (8 & 64 ranks)
+  fig13  throttling algorithms (adaptive/static/application), 64 ranks
+  fig14  merged vs independent kernels (8 & 64 ranks)
+  fig15  overlapping compute kernel
+  fig16_17 P2P-ordered vs RMA vs ST, intra (8r) and multi (64r)
+  roofline  per (arch x shape x mesh) terms from results/dryrun
+  throughput  tiny-config train tokens/s
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+WORKER = os.path.join(ROOT, "benchmarks", "faces_worker.py")
+
+
+def _worker(**kw):
+    cmd = [sys.executable, WORKER]
+    for k, v in kw.items():
+        cmd += [f"--{k}", str(v)]
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=2400)
+    if r.returncode != 0:
+        print(f"# WORKER FAILED {kw}: {r.stderr[-400:]}", flush=True)
+        return
+    for line in r.stdout.strip().splitlines():
+        if "," in line:
+            print(line, flush=True)
+
+
+def fig12():
+    print("# fig12: Faces overall — ST vs host-orchestrated active RMA")
+    for grid, tag in (("2,2,2", "8r"), ("4,4,4", "64r")):
+        _worker(grid=grid, mode="host", throttle="none", merged=1,
+                name=f"fig12_activeRMA_{tag}")
+        _worker(grid=grid, mode="st", throttle="adaptive", merged=1,
+                name=f"fig12_stRMA_{tag}")
+
+
+def fig13():
+    print("# fig13: throttling algorithms (64 ranks, resources=16)")
+    for thr in ("adaptive", "static"):
+        _worker(grid="4,4,4", mode="st", throttle=thr, resources=16,
+                name=f"fig13_{thr}_64r")
+    # application-level throttling == host-orchestrated resource reclaim
+    _worker(grid="4,4,4", mode="host", throttle="none", resources=16,
+            name="fig13_application_64r")
+
+
+def fig14():
+    print("# fig14: merged vs independent kernels")
+    for grid, tag in (("2,2,2", "8r"), ("4,4,4", "64r")):
+        for m in (1, 0):
+            _worker(grid=grid, mode="st", throttle="adaptive", merged=m,
+                    name=f"fig14_{'merged' if m else 'indep'}_{tag}")
+
+
+def fig15():
+    print("# fig15: overlapping compute kernel (64 ranks)")
+    for mode in ("st", "host"):
+        _worker(grid="4,4,4", mode=mode, throttle="adaptive", merged=1,
+                overlap=1, name=f"fig15_{mode}_overlap_64r")
+
+
+def fig16_17():
+    print("# fig16/17: traditional P2P (ordered) vs active RMA vs ST")
+    for grid, fig in (("2,2,2", "fig16"), ("4,4,4", "fig17")):
+        tag = "8r" if fig == "fig16" else "64r"
+        _worker(grid=grid, mode="host", throttle="none", merged=1, ordered=1,
+                name=f"{fig}_p2p_{tag}")
+        _worker(grid=grid, mode="host", throttle="none", merged=1,
+                name=f"{fig}_activeRMA_{tag}")
+        _worker(grid=grid, mode="st", throttle="adaptive", merged=1,
+                name=f"{fig}_stRMA_{tag}")
+
+
+def roofline():
+    print("# roofline: per-cell terms from results/dryrun "
+          "(us_per_call = bound step time; derived = roofline fraction)")
+    d = os.path.join(ROOT, "results", "dryrun")
+    if not os.path.isdir(d):
+        print("# (no dry-run results yet: run python -m repro.launch.dryrun"
+              " --all)")
+        return
+    for name in sorted(os.listdir(d)):
+        if not name.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(d, name)))
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        print(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},"
+              f"{rf['step_s']*1e6:.0f},{rf['roofline_fraction']:.4f}")
+
+
+def throughput():
+    print("# throughput: tiny-config train on CPU (derived = tokens/s)")
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.data import SyntheticTokens
+    from repro.models import init_params, model_specs
+    from repro.optim import opt_init_specs
+    from repro.sharding.rules import make_rules
+    from repro.train.steps import make_train_step
+
+    cfg = dataclasses.replace(get_config("granite-3-2b").reduced(),
+                              remat="none")
+    rules = make_rules(cfg, None, None)
+    specs = model_specs(cfg)
+    params = init_params(specs, jax.random.PRNGKey(0))
+    opt = init_params(opt_init_specs(cfg, specs), jax.random.PRNGKey(1),
+                      dtype=None)
+    step = jax.jit(make_train_step(cfg, rules, moe_impl="dense"))
+    ds = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=128,
+                         global_batch=8)
+    b = {k: jnp.asarray(v) for k, v in ds.batch_at(0).items()}
+    params, opt, _ = step(params, opt, b)   # compile
+    t0 = time.perf_counter()
+    n = 5
+    for _ in range(n):
+        params, opt, m = step(params, opt, b)
+    jax.block_until_ready(m["loss"])
+    dt = (time.perf_counter() - t0) / n
+    toks = 8 * 128
+    print(f"throughput_train_tiny,{dt*1e6:.0f},{toks/dt:.0f}")
+
+
+SECTIONS = {
+    "fig12": fig12, "fig13": fig13, "fig14": fig14, "fig15": fig15,
+    "fig16_17": fig16_17, "roofline": roofline, "throughput": throughput,
+}
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names")
+    args = ap.parse_args()
+    names = (args.only.split(",") if args.only else list(SECTIONS))
+    print("name,us_per_call,derived")
+    for n in names:
+        SECTIONS[n]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Quickstart: the ST communication API in 60 lines.
+
+Enqueue a 3-iteration Faces halo exchange on a 2x2x2 process grid; nothing
+executes until synchronize() — the single host sync of the stream-triggered
+model (paper Fig. 9b). Run:
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import STStream, halo
+from repro.launch.mesh import make_mesh
+
+GRID, N, NITER = (2, 2, 2), (8, 8, 8), 3
+
+mesh = make_mesh(GRID, ("x", "y", "z"))
+stream = STStream(mesh, ("x", "y", "z"))
+win = halo.create_faces_window(stream, N)
+kernels = halo.make_faces_kernels(N)
+
+state = stream.allocate()
+state["faces.src"] = jax.device_put(
+    jnp.asarray(np.random.RandomState(0).rand(8, *N), jnp.float32),
+    state["faces.src"].sharding)
+
+# ---- enqueue everything; the host never blocks ---------------------------
+for it in range(NITER):
+    halo.enqueue_faces_iteration(stream, win, N, kernels, merged=True)
+print(f"enqueued {len(stream.program)} ops "
+      f"({NITER} iterations x post/pack/26 puts/complete/wait/unpack)")
+
+# ---- ONE host sync: trace -> compile -> execute on the device grid -------
+state = stream.synchronize(state, mode="st", throttle="adaptive",
+                           resources=16, merged=True)
+
+print("post signals per rank:", np.asarray(state["faces.post_sig"])[0, :6],
+      "... (= iterations: epoch protocol ran fully on-device)")
+print("halo-accumulated max:", float(np.asarray(state['faces.res']).max()))
+
+# ---- compare against the host-orchestrated baseline (Fig. 9a) ------------
+stream2 = STStream(mesh, ("x", "y", "z"))
+win2 = halo.create_faces_window(stream2, N)
+k2 = halo.make_faces_kernels(N)
+state2 = stream2.allocate()
+state2["faces.src"] = jax.device_put(
+    jnp.asarray(np.random.RandomState(0).rand(8, *N), jnp.float32),
+    state2["faces.src"].sharding)
+for it in range(NITER):
+    halo.enqueue_faces_iteration(stream2, win2, N, k2, merged=True)
+state2 = stream2.synchronize(state2, mode="host")
+
+np.testing.assert_allclose(np.asarray(state["faces.acc"]),
+                           np.asarray(state2["faces.acc"]), rtol=1e-5)
+print("ST result == host-orchestrated result: OK")

@@ -1,0 +1,83 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps on
+synthetic data with checkpointing (deliverable b).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+Uses a scaled-down granite family config (~100M params with the full
+49k vocab) — loss should drop well below the ~10.8 unigram entropy as the
+model learns the planted motifs. On CPU this takes a few minutes; pass
+--tiny for a 2-minute smoke.
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.data import SyntheticTokens, make_batch_iterator
+from repro.models import init_params, model_specs
+from repro.optim import cosine_schedule, opt_init_specs
+from repro.runtime import TrainingRuntime
+from repro.sharding.rules import make_rules
+from repro.train.steps import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    base = get_config("granite-3-2b")
+    if args.tiny:
+        cfg = base.reduced()
+        seq, batch = 64, 8
+    else:
+        # ~100M-class: 12L x 768 with the real vocab
+        cfg = dataclasses.replace(
+            base, num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+            d_ff=2048, head_dim=64, grad_accum=1, remat="none",
+            tie_embeddings=True)
+        seq, batch = 128, 8
+    cfg = dataclasses.replace(cfg, grad_accum=1)
+    rules = make_rules(cfg, None, None)
+    specs = model_specs(cfg)
+    params = init_params(specs, jax.random.PRNGKey(0))
+    opt = init_params(opt_init_specs(cfg, specs), jax.random.PRNGKey(1),
+                      dtype=None)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"training {cfg.name}-derived model: {n/1e6:.1f}M params, "
+          f"seq={seq} batch={batch}")
+
+    sched = lambda s: cosine_schedule(s, peak_lr=6e-4, warmup=30,
+                                      total=args.steps)
+    step_jit = jax.jit(make_train_step(cfg, rules, moe_impl="dense",
+                                       schedule=sched))
+    ds = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=seq,
+                         global_batch=batch, seed=0)
+    rt = TrainingRuntime(args.ckpt_dir, ckpt_every=100)
+
+    def step_fn(state, batch_np):
+        b = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        p, o, m = step_jit(state["params"], state["opt"], b)
+        return {"params": p, "opt": o}, m
+
+    it = make_batch_iterator(ds)
+    t0 = time.time()
+    state, step, _ = rt.run({"params": params, "opt": opt}, it, step_fn,
+                            total_steps=args.steps, log_every=20)
+    it.close()
+    dt = time.time() - t0
+    print(f"{step} steps in {dt:.0f}s; "
+          f"{step*batch*seq/dt:.0f} tok/s; checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

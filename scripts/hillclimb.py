@@ -1,0 +1,64 @@
+"""Hillclimb runner: re-runs a dry-run cell with a candidate change and
+records before/after roofline terms to results/perf/<tag>.json.
+
+  PYTHONPATH=src python scripts/hillclimb.py --arch deepseek-v2-236b \\
+      --shape train_4k --tag moe_a2a --moe-impl a2a
+  PYTHONPATH=src python scripts/hillclimb.py --arch qwen3-32b \\
+      --shape train_4k --tag seqshard_off --cfg '{"seq_shard_activations": false}'
+  PYTHONPATH=src python scripts/hillclimb.py --arch llama-3.2-vision-90b \\
+      --shape decode_32k --tag kvseq_data --overrides '{"kv_seq": "data"}'
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--moe-impl", default="gshard")
+    ap.add_argument("--overrides", default=None)
+    ap.add_argument("--cfg", default=None,
+                    help="JSON dict of ModelConfig field replacements")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun_lib import run_cell
+
+    cfg_edit = None
+    if args.cfg:
+        edits = json.loads(args.cfg)
+        # tuples for sharding_overrides etc.
+        def cfg_edit(cfg):
+            fixed = {}
+            for k, v in edits.items():
+                if k == "sharding_overrides":
+                    v = tuple((a, tuple(b) if isinstance(b, list) else b)
+                              for a, b in v)
+                fixed[k] = v
+            return dataclasses.replace(cfg, **fixed)
+
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   overrides=json.loads(args.overrides) if args.overrides
+                   else None,
+                   moe_impl=args.moe_impl, cfg_edit=cfg_edit)
+    rec["tag"] = args.tag
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(
+        args.out, f"{args.arch}__{args.shape}__{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    brief = {k: rec.get(k) for k in ("status", "roofline", "memory",
+                                     "compile_s", "error")}
+    print(json.dumps(brief, indent=1)[:2000])
+    print(f"-> {path}")
+
+
+if __name__ == "__main__":
+    main()

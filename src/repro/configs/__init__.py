@@ -1,0 +1,22 @@
+"""Arch registry + shape sets (see base.py)."""
+from repro.configs.base import (
+    ARCH_IDS,
+    LayerGroups,
+    MLAConfig,
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+    RWKVConfig,
+    SHAPES,
+    ShapeConfig,
+    VisionStub,
+    get_config,
+    group_layers,
+    shape_applicable,
+)
+
+__all__ = [
+    "ARCH_IDS", "LayerGroups", "MLAConfig", "MambaConfig", "ModelConfig",
+    "MoEConfig", "RWKVConfig", "SHAPES", "ShapeConfig", "VisionStub",
+    "get_config", "group_layers", "shape_applicable",
+]

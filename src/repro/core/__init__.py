@@ -1,0 +1,14 @@
+"""The paper's primary contribution: stream-triggered (ST) communication
+for JAX/TPU — deferred-execution op queues, triggered-op descriptors with
+chained completion signals, throttling, merged kernels, and the Faces
+nearest-neighbor halo exchange; plus the training-side integrations
+(overlapped grad reduction, ring attention transport, EP all-to-all).
+"""
+from repro.core.stream import STStream
+from repro.core.window import STWindow
+from repro.core.triggered import TriggeredOp, ResourcePool
+from repro.core.throttle import CostModel, SimOp, simulate, faces_sim_ops
+from repro.core import halo
+
+__all__ = ["STStream", "STWindow", "TriggeredOp", "ResourcePool",
+           "CostModel", "SimOp", "simulate", "faces_sim_ops", "halo"]

@@ -1,0 +1,119 @@
+"""Ring / sharded-KV attention transport for long contexts.
+
+The Faces pattern in 1-D: KV shards live on a ring over the "data" axis;
+for long_500k decode each device computes a partial flash-decode over its
+local KV shard and the partials merge with ONE tiny collective (the
+log-sum-exp merge) instead of rotating the ring — decode reads every KV
+byte exactly once wherever it lives. For training-length sequences the
+full rotation variant (ppermute of KV blocks with compute/transfer double
+buffering) is ring_attention_train below — the ST discipline: transfers
+for step i+1 are enqueued (deferred) while step i computes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+def sharded_decode_attention(q, k, v, positions, *, mesh, axis="data"):
+    """One-token attention over a KV cache whose sequence dim is sharded
+    over `axis`. Each shard computes local (m, l, acc); a single
+    all-gather of the (B,H[,hdv]) stats merges them (bytes ~ B*H*hdv per
+    device vs reading S*KV*hd of cache — negligible collective cost).
+
+    q: (B,1,H,hd) replicated over axis; k,v: (B,S,KV,hd) sharded dim1;
+    positions: (B,) last valid position (global).
+    """
+    B, _, H, hd = q.shape
+    S = k.shape[1]
+    n = mesh.shape[axis]
+    S_l = S // n
+
+    def shard_fn(q, k, v, pos):
+        i = jax.lax.axis_index(axis)
+        KV = k.shape[2]
+        G = H // KV
+        kk = jnp.repeat(k, G, axis=2) if G > 1 else k
+        vv = jnp.repeat(v, G, axis=2) if G > 1 else v
+        scale = 1.0 / (hd ** 0.5)
+        s = jnp.einsum("bhd,bshd->bhs", q[:, 0],
+                       kk).astype(jnp.float32) * scale
+        idx = i * S_l + jnp.arange(S_l)
+        mask = idx[None, :] <= pos[:, None]
+        s = jnp.where(mask[:, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1)                              # (B,H)
+        p = jnp.exp(s - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        acc = jnp.einsum("bhs,bshd->bhd", p.astype(vv.dtype), vv)
+        # merge partials: ONE all-gather of tiny stats
+        ms = jax.lax.all_gather(m, axis)                     # (n,B,H)
+        ls = jax.lax.all_gather(l, axis)
+        accs = jax.lax.all_gather(acc, axis)                 # (n,B,H,hd)
+        m_g = jnp.max(ms, axis=0)
+        w = jnp.exp(ms - m_g[None])
+        l_g = jnp.sum(ls * w, axis=0)
+        acc_g = jnp.sum(accs * w[..., None].astype(accs.dtype), axis=0)
+        out = acc_g / jnp.maximum(l_g, 1e-30)[..., None].astype(accs.dtype)
+        return out[:, None].astype(q.dtype)                  # (B,1,H,hd)
+
+    return jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None),
+                  P()),
+        out_specs=P(), check_vma=False,
+    )(q, k, v, positions)
+
+
+def ring_attention_train(q, k, v, *, mesh, axis="data", causal=True):
+    """Training-length ring attention: KV rotates around `axis`; each step
+    overlaps the next permute with the current block's attention (the ST
+    deferred-put discipline). q,k,v: (B, S, H[,KV], hd) with S sharded over
+    axis; causal masking by absolute block positions."""
+    n = mesh.shape[axis]
+    B, S, H, hd = q.shape
+
+    def shard_fn(q, k, v):
+        i = jax.lax.axis_index(axis)
+        S_l = q.shape[1]
+        scale = 1.0 / (hd ** 0.5)
+        q_pos = i * S_l + jnp.arange(S_l)
+
+        def step(carry, r):
+            k_r, v_r, m, l, acc = carry
+            src_block = (i - r) % n
+            k_pos = src_block * S_l + jnp.arange(S_l)
+            s = jnp.einsum("bqhd,bshd->bhqs", q, k_r) \
+                .astype(jnp.float32) * scale
+            if causal:
+                mask = k_pos[None, :] <= q_pos[:, None]
+                s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqs,bshd->bhqd", p.astype(v_r.dtype), v_r)
+            # deferred transfer for the next step (overlaps with compute)
+            perm = [(j, (j + 1) % n) for j in range(n)]
+            k_r = jax.lax.ppermute(k_r, axis, perm)
+            v_r = jax.lax.ppermute(v_r, axis, perm)
+            return (k_r, v_r, m_new, l, acc), None
+
+        m0 = jnp.full((B, H, S_l), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, S_l), jnp.float32)
+        a0 = jnp.zeros((B, H, S_l, hd), jnp.float32)
+        (k_f, v_f, m, l, acc), _ = jax.lax.scan(
+            step, (k, v, m0, l0, a0), jnp.arange(n))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.einsum("bhqd->bqhd", out).astype(q.dtype)
+
+    return jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(None, axis, None, None),) * 3,
+        out_specs=P(None, axis, None, None), check_vma=False,
+    )(q, k, v)

@@ -1,0 +1,406 @@
+"""STStream — the stream-triggered deferred execution queue (paper §2, §4).
+
+The host *enqueues* operations (post / start / put / complete / wait /
+kernel launches) and returns immediately; nothing executes until
+``synchronize``. Two executors give the paper's A/B comparison:
+
+  * mode="st"   (Fig. 9b): the WHOLE queue (all iterations) is traced into
+    ONE jitted shard_map program — the TPU analogue of the GPU SEC executing
+    enqueued descriptors with NIC triggered ops, zero host round-trips.
+    ``synchronize`` is the single host sync at the end.
+
+  * mode="host" (Fig. 9a): each operation group runs as its own jitted call
+    with host blocking at every epoch boundary — the CPU-orchestrated
+    standard active-RMA baseline.
+
+Signals and completions are REAL counter buffers updated by chained tiny
+puts (paper §3.1–3.2), so tests can assert the epoch protocol, and
+dependencies (optimization_barrier edges) encode trigger/completion
+ordering so schedules are faithful.
+
+Throttling (paper §5.2) constrains put issue through a finite ResourcePool:
+  * "application": the app inserts host_sync() points (program splits)
+  * "static":  epoch e puts depend on ALL epoch e-1 completions
+  * "adaptive": put i depends only on completion of put i-R (sliding window)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.triggered import ResourcePool, TriggeredOp
+from repro.core.window import STWindow
+
+
+def _tie(x, dep):
+    """Make x depend on dep without changing its value."""
+    if dep is None:
+        return x
+    x, _ = jax.lax.optimization_barrier((x, dep))
+    return x
+
+
+@dataclass
+class _Op:
+    kind: str
+    window: Optional[STWindow] = None
+    fn: Optional[Callable] = None
+    reads: Tuple[str, ...] = ()
+    writes: Tuple[str, ...] = ()
+    put: Optional[dict] = None
+    label: str = ""
+
+    def cache_key(self):
+        put = (tuple(sorted(self.put.items())) if self.put else None)
+        return (self.kind, id(self.fn), self.reads, self.writes, put,
+                self.window.name if self.window else None, self.label)
+
+
+class STStream:
+    """Deferred op queue over a process-grid mesh."""
+
+    def __init__(self, mesh: Mesh, grid_axes: Sequence[str],
+                 periodic: bool = True):
+        self.mesh = mesh
+        self.grid_axes = tuple(grid_axes)
+        self.grid_shape = tuple(mesh.shape[a] for a in self.grid_axes)
+        self.num_ranks = int(np.prod(self.grid_shape))
+        self.periodic = periodic
+        self.program: List[_Op] = []
+        self.windows: Dict[str, STWindow] = {}
+        self._perm_cache: Dict[tuple, list] = {}
+
+    # -- window management --------------------------------------------------
+    def create_window(self, name, buffers, group) -> STWindow:
+        win = STWindow(name=name, buffers=buffers, group=list(group))
+        self.windows[name] = win
+        return win
+
+    def allocate(self) -> Dict[str, jnp.ndarray]:
+        state = {}
+        for win in self.windows.values():
+            state.update(win.allocate(self.num_ranks))
+        if self.mesh is not None:
+            spec = self.state_spec()
+            state = {k: jax.device_put(
+                v, NamedSharding(self.mesh, spec)) for k, v in state.items()}
+        return state
+
+    def state_spec(self) -> P:
+        return P(self.grid_axes)
+
+    # -- enqueue API (returns immediately: deferred execution) ---------------
+    def launch(self, fn, reads, writes, label="kernel"):
+        self.program.append(_Op("kernel", fn=fn, reads=tuple(reads),
+                                writes=tuple(writes), label=label))
+
+    def post(self, win: STWindow):
+        self.program.append(_Op("post", window=win))
+
+    def start(self, win: STWindow, mode: str = "MPIX_MODE_STREAM"):
+        self.program.append(_Op("start", window=win, label=mode))
+
+    def put(self, win: STWindow, src: str, dst: str, direction):
+        self.program.append(_Op("put", window=win,
+                                put=dict(src=src, dst=dst,
+                                         direction=tuple(direction))))
+
+    def complete(self, win: STWindow):
+        self.program.append(_Op("complete", window=win))
+
+    def wait(self, win: STWindow):
+        self.program.append(_Op("wait", window=win))
+
+    def host_sync(self):
+        """Application-level throttling point (paper §5.2.1)."""
+        self.program.append(_Op("hostsync"))
+
+    def clear(self):
+        self.program = []
+
+    # -- neighbor permutation -------------------------------------------------
+    def perm_for(self, direction: tuple) -> list:
+        if direction in self._perm_cache:
+            return self._perm_cache[direction]
+        dims = self.grid_shape
+        nd = len(dims)
+        d = tuple(direction) + (0,) * (nd - len(direction))
+
+        def lin(coord):
+            idx = 0
+            for c, n in zip(coord, dims):
+                idx = idx * n + (c % n)
+            return idx
+
+        pairs = []
+        for src in np.ndindex(*dims):
+            dst = tuple((src[i] + d[i]) % dims[i] for i in range(nd))
+            if not self.periodic:
+                ok = all(0 <= src[i] + d[i] < dims[i] for i in range(nd))
+                if not ok:
+                    continue
+            pairs.append((lin(src), lin(dst)))
+        self._perm_cache[direction] = pairs
+        return pairs
+
+    def _opposite_index(self, win: STWindow, direction) -> int:
+        opp = tuple(-x for x in direction)
+        return win.group.index(opp)
+
+    # -- execution -------------------------------------------------------------
+    def synchronize(self, state, mode: str = "st", throttle: str = "adaptive",
+                    resources: int = 64, merged: bool = True,
+                    donate: bool = True, ordered: bool = False):
+        """Execute the enqueued program; returns the new state.
+
+        mode="st": one compiled program, single host sync (this call).
+        mode="host": per-op dispatch with blocking at epoch boundaries.
+        """
+        segments = self._split_segments()
+        for seg in segments:
+            if mode == "st":
+                state = self._run_segment_compiled(seg, state, throttle,
+                                                   resources, merged, donate,
+                                                   ordered)
+            else:
+                state = self._run_segment_host(seg, state, ordered)
+            # application-level sync between segments: full host block
+            jax.block_until_ready(jax.tree.leaves(state)[0])
+        return state
+
+    def _split_segments(self):
+        segs, cur = [], []
+        for op in self.program:
+            if op.kind == "hostsync":
+                if cur:
+                    segs.append(cur)
+                cur = []
+            else:
+                cur.append(op)
+        if cur:
+            segs.append(cur)
+        return segs
+
+    # -- compiled (ST) execution ----------------------------------------------
+    def _run_segment_compiled(self, seg, state, throttle, resources, merged,
+                              donate, ordered=False):
+        keys = sorted(state.keys())
+        ck = (tuple(op.cache_key() for op in seg), tuple(keys), throttle,
+              resources, merged, donate, ordered)
+        cache = getattr(self, "_cfc", None)
+        if cache is None:
+            cache = self._cfc = {}
+        jfn = cache.get(ck)
+        if jfn is None:
+            spec = self.state_spec()
+
+            def seg_fn(*vals):
+                st = dict(zip(keys, vals))
+                st = self._emit(seg, st, throttle=throttle,
+                                resources=resources, merged=merged,
+                                compiled=True, ordered=ordered)
+                return tuple(st[k] for k in keys)
+
+            sharded = jax.shard_map(
+                seg_fn, mesh=self.mesh,
+                in_specs=(spec,) * len(keys), out_specs=(spec,) * len(keys))
+            jfn = cache[ck] = jax.jit(
+                sharded,
+                donate_argnums=tuple(range(len(keys))) if donate else ())
+        out = jfn(*[state[k] for k in keys])
+        return dict(zip(keys, out))
+
+    # -- host-orchestrated (baseline) execution --------------------------------
+    def _run_segment_host(self, seg, state, ordered=False):
+        """Fig. 9a: one dispatch per op, blocking at epoch sync points.
+        Each put issues as its own host dispatch; the host tracks the
+        epoch's issued puts so MPI_Win_complete can emit the completion
+        signals (in the real baseline the MPI runtime holds this state)."""
+        py_deferred: Dict[str, tuple] = {}
+        for op in seg:
+            blocking = op.kind in ("complete", "wait", "start")
+            pre = None
+            if op.kind == "put":
+                py_deferred.setdefault(op.window.name, ())
+                py_deferred[op.window.name] += (
+                    tuple(sorted(op.put.items())),)
+            if op.kind == "complete":
+                pre = py_deferred.pop(op.window.name, ())
+            state = self._dispatch_ops_host((op,), state, pre, ordered)
+            if blocking:
+                jax.block_until_ready(jax.tree.leaves(state)[0])
+        return state
+
+    def _dispatch_ops_host(self, ops, state, pre=None, ordered=False):
+        keys = sorted(state.keys())
+        ck = (tuple(op.cache_key() for op in ops), tuple(keys), pre, ordered)
+        cache = getattr(self, "_hfc", None)
+        if cache is None:
+            cache = self._hfc = {}
+        fn = cache.get(ck)
+        if fn is None:
+            fn = cache[ck] = self._host_fn_build(ops, tuple(keys), pre,
+                                                 ordered)
+        out = fn(*[state[k] for k in keys])
+        return dict(zip(keys, out))
+
+    def _host_fn_build(self, ops, keys, pre=None, ordered=False):
+        spec = self.state_spec()
+        preload = None
+        if pre is not None and ops[0].kind == "complete":
+            preload = {ops[0].window.name: [dict(t) for t in pre]}
+
+        def seg_fn(*vals):
+            st = dict(zip(keys, vals))
+            st = self._emit(list(ops), st, throttle="none", resources=1 << 30,
+                            merged=False, compiled=False, preload=preload,
+                            ordered=ordered)
+            return tuple(st[k] for k in keys)
+
+        sharded = jax.shard_map(
+            seg_fn, mesh=self.mesh,
+            in_specs=(spec,) * len(keys), out_specs=(spec,) * len(keys))
+        return jax.jit(sharded)
+
+    # -- op emission (shared by both executors) --------------------------------
+    def _emit(self, seg, st, *, throttle, resources, merged, compiled,
+              preload=None, ordered=False):
+        # ordered=True: P2P message-matching semantics — each send/recv pair
+        # is serialized on the previous one (paper §4.3 / §7(1)); RMA puts
+        # within an epoch are unordered (ordered=False).
+        pool = ResourcePool(capacity=resources)
+        comp_events: Dict[int, Any] = {}      # op_id -> completion token
+        epoch_events: List[List[Any]] = [[]]  # per-epoch completions
+        deferred: Dict[str, List[dict]] = dict(preload or {})
+        post_dep: Dict[str, Any] = {}
+        axis = self.grid_axes
+
+        def ppermute(x, direction):
+            return jax.lax.ppermute(x, axis, self.perm_for(direction))
+
+        op_counter = [0]
+
+        for op in seg:
+            if op.kind == "kernel":
+                args = [st[r] for r in op.reads]
+                outs = op.fn(*args)
+                if not isinstance(outs, (tuple, list)):
+                    outs = (outs,)
+                for w, o in zip(op.writes, outs):
+                    st[w] = o
+            elif op.kind == "post":
+                win = op.window
+                # signal exposure-epoch-open to every origin: one tiny
+                # triggered put per neighbor (paper §5.1.2), arriving in the
+                # slot indexed by the opposite direction.
+                incs = []
+                for j, d in enumerate(win.group):
+                    one = jnp.ones((1, 1), jnp.int32)
+                    arrived = ppermute(one, d)
+                    tgt_slot = self._opposite_index(win, d)
+                    incs.append((tgt_slot, arrived))
+                sig = st[win.post_sig]
+                if merged:  # merged signal kernel (paper §5.4)
+                    upd = jnp.zeros_like(sig)
+                    for slot, a in incs:
+                        upd = upd.at[:, slot].add(a[:, 0])
+                    sig = sig + upd
+                else:
+                    for slot, a in incs:
+                        sig = sig.at[:, slot].add(a[:, 0])
+                st[win.post_sig] = sig
+            elif op.kind == "start":
+                # origin-side wait for exposure signals: subsequent puts are
+                # tied to the post counter (GPU wait kernel / dataflow edge)
+                post_dep[op.window.name] = st[op.window.post_sig]
+            elif op.kind == "put":
+                if compiled:
+                    # ST: enqueue the triggered descriptor; fires at the
+                    # trigger event emitted by complete() (deferred).
+                    deferred.setdefault(op.window.name, []).append(op.put)
+                else:
+                    # baseline RMA: the put issues immediately when called
+                    # (host-dispatched); completion signal sent at complete.
+                    win = op.window
+                    payload = _tie(st[op.put["src"]],
+                                   post_dep.get(win.name))
+                    # host-mode ordering is implicit: each put is its own
+                    # blocking-ordered dispatch (P2P == RMA here; the cost
+                    # difference is modeled in the simulator's derived col)
+                    arrived = ppermute(payload, op.put["direction"])
+                    st[op.put["dst"]] = arrived
+                    deferred.setdefault(win.name, []).append(
+                        dict(op.put, done=True))
+            elif op.kind == "complete":
+                win = op.window
+                puts = deferred.pop(win.name, [])
+                comp_incs = []
+                if not compiled:
+                    for p in puts:
+                        one = _tie(jnp.ones((1, 1), jnp.int32),
+                                   st[p["dst"]].ravel()[:1])
+                        sig = ppermute(one, p["direction"])
+                        slot = self._opposite_index(win, p["direction"])
+                        st[win.comp_sig] = st[win.comp_sig].at[:, slot].add(
+                            sig[:, 0])
+                    epoch_events.append([])
+                    continue
+                for p in puts:
+                    payload = st[p["src"]]
+                    payload = _tie(payload, post_dep.get(win.name))
+                    # throttling dependency (trigger-resource reuse)
+                    op_id = op_counter[0]; op_counter[0] += 1
+                    blocker = pool.acquire(op_id)
+                    if ordered and comp_events:
+                        payload = _tie(payload,
+                                       comp_events[max(comp_events)])
+                    if throttle == "adaptive" and blocker is not None:
+                        payload = _tie(payload, comp_events.get(blocker))
+                    elif throttle == "static" and len(epoch_events) >= 2:
+                        for ev in epoch_events[-2]:
+                            payload = _tie(payload, ev)
+                    arrived = ppermute(payload, p["direction"])
+                    st[p["dst"]] = arrived
+                    slot = self._opposite_index(win, p["direction"])
+                    if merged:
+                        # TPU-idiomatic completion (beyond-paper, see
+                        # EXPERIMENTS §Perf): the arrived payload IS the
+                        # completion event at the target — bump the target
+                        # counter locally, tied to arrival, instead of a
+                        # second wire signal. Saves one tiny collective per
+                        # put (26/iteration in Faces).
+                        one = _tie(jnp.ones((1,), jnp.int32),
+                                   arrived.ravel()[:1])
+                        st[win.comp_sig] = st[win.comp_sig].at[:, slot].add(
+                            one)
+                    else:
+                        # paper §3.2 chained signal: a second triggered put
+                        # bumping the TARGET's comp counter over the wire.
+                        one = _tie(jnp.ones((1, 1), jnp.int32),
+                                   arrived.ravel()[:1])
+                        sig = ppermute(one, p["direction"])
+                        st[win.comp_sig] = st[win.comp_sig].at[:, slot].add(
+                            sig[:, 0])
+                    ev = arrived.ravel()[:1]
+                    comp_events[op_id] = ev
+                    epoch_events[-1].append(ev)
+                epoch_events.append([])
+            elif op.kind == "wait":
+                win = op.window
+                # wait kernel: all subsequent reads depend on the comp counter
+                dep = st[win.comp_sig]
+                for k in list(st.keys()):
+                    if k.startswith(win.name + ".") and not k.endswith("_sig"):
+                        st[k] = _tie(st[k], dep)
+        return st
+
+
+def counters_expected(niter: int, npeers: int):
+    """After n iterations of post/complete, every signal slot == n."""
+    return niter * np.ones((npeers,), np.int32)

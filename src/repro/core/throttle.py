@@ -1,0 +1,122 @@
+"""Throttling policies (paper §5.2) + an event-driven schedule simulator.
+
+The policies themselves are enforced at trace time in stream.py (dependency
+edges). This module adds the analytic model used by benchmarks' "derived"
+column: given per-op costs, compute the critical-path completion time of a
+Faces-style program under each policy — the CPU container can't reproduce
+Slingshot/MI250 latencies, so wall-clock A/B numbers are complemented with
+this calibrated simulation.
+
+Cost parameters (defaults loosely follow the paper's system: host dispatch
+and kernel-launch costs dominate small-message halo exchange):
+  t_dispatch — host enqueue of one op (CPU -> queue)        [us]
+  t_launch   — device kernel launch/teardown                [us]
+  t_sync     — host<->device synchronization (hipStreamSync)[us]
+  t_put(b)   — network put latency for b bytes              [us]
+  t_signal   — tiny signal put                              [us]
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class CostModel:
+    t_dispatch: float = 0.3
+    t_launch: float = 4.0
+    t_sync: float = 12.0
+    t_signal: float = 1.2
+    put_base: float = 2.0
+    put_per_kb: float = 0.05
+
+    def t_put(self, nbytes: int) -> float:
+        return self.put_base + self.put_per_kb * nbytes / 1024.0
+
+
+@dataclass
+class SimOp:
+    kind: str              # kernel | put | signal | sync
+    nbytes: int = 0
+    epoch: int = 0
+
+
+def simulate(ops: List[SimOp], policy: str, resources: int,
+             cm: CostModel = CostModel(), merged: bool = True,
+             host_orchestrated: bool = False) -> float:
+    """Critical-path time (us) of a linear ST program.
+
+    host_orchestrated=True models the baseline (Fig. 9a): every op pays a
+    host dispatch, and every epoch boundary pays t_sync. Otherwise ops pay
+    one enqueue-time dispatch but execute back-to-back on the device
+    (GPU-SEC/TPU-sequencer in-order execution), and throttling decides when
+    a put may issue relative to completions.
+    """
+    t_host = 0.0            # host timeline
+    t_dev = 0.0             # device/NIC timeline
+    completions: List[float] = []   # put completion times
+    epoch_done: Dict[int, float] = {}
+    cur_epoch_comp: List[float] = []
+    last_epoch = 0
+
+    for op in ops:
+        t_host += cm.t_dispatch
+        if host_orchestrated:
+            t_dev = max(t_dev, t_host)
+        if op.kind == "kernel":
+            t_dev += cm.t_launch
+        elif op.kind == "signal":
+            t_dev += cm.t_signal if merged else cm.t_launch + cm.t_signal
+        elif op.kind == "put":
+            start = t_dev
+            # finite descriptor slots (paper §5.2): how a put may issue
+            # once the pool is exhausted differs per policy
+            if policy == "static" and len(completions) >= resources:
+                # weak sync inside the runtime: wait for ALL previously
+                # posted triggered ops to complete (§5.2.2)
+                start = max(start, max(completions))
+                completions.clear()
+            if policy == "adaptive" and len(completions) >= resources:
+                # recapture just the oldest slot (§5.2.3 sliding window)
+                start = max(start, completions[-resources])
+            if policy == "application" and len(completions) >= resources:
+                # host sync to reclaim everything (§5.2.1)
+                t_host = max(t_host, max(completions)) + cm.t_sync
+                start = max(start, t_host)
+                completions.clear()
+            end = start + cm.t_put(op.nbytes)
+            completions.append(end)
+            cur_epoch_comp.append(end)
+            t_dev = start  # puts are offloaded; device continues
+        elif op.kind == "sync":
+            t_host = max(t_host, t_dev,
+                         max(completions) if completions else 0.0) + cm.t_sync
+            if host_orchestrated:
+                t_dev = t_host
+    return max(t_host, t_dev, max(completions) if completions else 0.0)
+
+
+def faces_sim_ops(niter: int, nbytes_face: int, npeers: int = 26,
+                  merged: bool = True) -> List[SimOp]:
+    """The op sequence of the Faces inner loop for the simulator."""
+    ops: List[SimOp] = []
+    for it in range(niter):
+        ops.append(SimOp("kernel"))                      # increment
+        if merged:
+            ops.append(SimOp("kernel"))                  # pack (merged)
+            ops.append(SimOp("signal", epoch=it))        # merged post signals
+        else:
+            ops.extend(SimOp("kernel") for _ in range(npeers))
+            ops.extend(SimOp("signal", epoch=it) for _ in range(npeers))
+        ops.extend(SimOp("put", nbytes=nbytes_face, epoch=it)
+                   for _ in range(npeers))
+        if merged:
+            ops.append(SimOp("signal", epoch=it))        # merged completions
+            ops.append(SimOp("kernel"))                  # wait (merged)
+            ops.append(SimOp("kernel"))                  # unpack+compare
+        else:
+            ops.extend(SimOp("signal", epoch=it) for _ in range(npeers))
+            ops.extend(SimOp("kernel") for _ in range(npeers))  # waits
+            ops.extend(SimOp("kernel") for _ in range(npeers))  # unpacks
+    ops.append(SimOp("sync"))
+    return ops

@@ -1,0 +1,69 @@
+"""Triggered-operation model (paper §3).
+
+A NIC triggered op has (trigger_counter, threshold, completion_counter):
+it executes when trigger_counter reaches threshold, and bumps its
+completion counter when done. Completion observation is CHAINED (§3.2):
+the payload's completion counter is the trigger counter of a signal op
+that increments a device-memory location a wait kernel polls.
+
+TPU adaptation: counters are named slots in a device-resident counter
+buffer; the "MMIO doorbell" is a dataflow edge (or a Pallas semaphore in
+the kernels/ layer). Descriptors below are TRACE-TIME objects — enqueued by
+the host immediately, lowered into the single compiled program that the
+TPU executes without further host involvement (the offload property).
+
+Resources are finite (§5.2): `ResourcePool` models the NIC's triggered-op
+slots; throttling policies in throttle.py decide how slot reuse constrains
+the schedule.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+_ids = itertools.count()
+
+
+@dataclass
+class TriggeredOp:
+    """A deferred put (payload) or signal descriptor."""
+    kind: str                      # "put" | "signal"
+    window: str
+    src: Optional[str] = None      # staging buffer name (puts)
+    dst: Optional[str] = None      # destination buffer name on target
+    direction: Any = None          # neighbor offset (halo) or perm pairs
+    nbytes: int = 0
+    epoch: int = 0
+    trigger_counter: str = ""      # counter slot name
+    threshold: int = 1
+    completion_counter: str = ""   # counter slot name bumped on completion
+    op_id: int = field(default_factory=lambda: next(_ids))
+    chained: Optional["TriggeredOp"] = None  # §3.2 chaining
+
+
+@dataclass
+class ResourcePool:
+    """Finite triggered-op descriptor slots (paper §5.2).
+
+    `acquire` returns the op_id whose completion must precede reuse of the
+    slot (None while slots are free) — the throttling policy turns that
+    into a schedule dependency.
+    """
+    capacity: int
+    in_flight: list = field(default_factory=list)
+    high_water: int = 0
+
+    def acquire(self, op_id: int) -> Optional[int]:
+        blocker = None
+        if len(self.in_flight) >= self.capacity:
+            blocker = self.in_flight.pop(0)
+        self.in_flight.append(op_id)
+        self.high_water = max(self.high_water, len(self.in_flight))
+        return blocker
+
+    def release_all(self):
+        self.in_flight.clear()
+
+    def release_upto(self, op_id: int):
+        self.in_flight = [o for o in self.in_flight if o > op_id]

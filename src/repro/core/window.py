@@ -1,0 +1,55 @@
+"""STWindow — MPI_Win analogue (paper §4.1).
+
+A window names a set of remotely-accessible device buffers plus the signal
+counters the runtime uses for epoch management:
+
+  * data buffers: {name: (local_shape, dtype)} — each rank's exposed memory
+  * "<win>.post_sig"  counter — exposure-epoch-open signals from targets
+  * "<win>.comp_sig"  counter — access-epoch-complete signals from origins
+
+Counter buffers are int32 (num_peers,) slots per rank. On the mesh, a rank
+is one device of the process grid; buffers carry a leading rank dimension
+sharded over all grid axes (shard_map gives each device its local block).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class STWindow:
+    name: str
+    buffers: Dict[str, Tuple[tuple, object]]   # name -> (local_shape, dtype)
+    group: Sequence                              # neighbor directions/peers
+
+    @property
+    def post_sig(self) -> str:
+        return f"{self.name}.post_sig"
+
+    @property
+    def comp_sig(self) -> str:
+        return f"{self.name}.comp_sig"
+
+    def counter_names(self):
+        return [self.post_sig, self.comp_sig]
+
+    def buffer_names(self):
+        return list(self.buffers)
+
+    def allocate(self, num_ranks: int) -> Dict[str, jnp.ndarray]:
+        """Materialize global buffers: (num_ranks, *local_shape)."""
+        state = {}
+        for bname, (shape, dtype) in self.buffers.items():
+            state[f"{self.name}.{bname}"] = jnp.zeros(
+                (num_ranks,) + tuple(shape), dtype)
+        npeers = max(len(self.group), 1)
+        state[self.post_sig] = jnp.zeros((num_ranks, npeers), jnp.int32)
+        state[self.comp_sig] = jnp.zeros((num_ranks, npeers), jnp.int32)
+        return state
+
+    def qual(self, bname: str) -> str:
+        return f"{self.name}.{bname}"

@@ -1,0 +1,103 @@
+"""Flash-decode: one query token against a long KV cache.
+
+Memory-bound by design (reads the whole valid KV range once); grid
+(B, KV, nk) with nk sequential, carrying online-softmax state in VMEM.
+All G=H/KV query heads of one kv head are processed together as the
+(G, hd) left operand of the MXU matmul — the kernel's arithmetic
+intensity is G flops/byte of cache, which is exactly why GQA exists.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(pos_ref, kvlen_ref,
+                q_ref, k_ref, v_ref, o_ref,
+                m_ref, l_ref, acc_ref,
+                *, block_k, nk, gq):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bk, hdv)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    k_pos = (ik * block_k
+             + jax.lax.broadcasted_iota(jnp.int32, (gq, block_k), 1))
+    valid = jnp.minimum(pos_ref[b] + 1, kvlen_ref[b])
+    s = jnp.where(k_pos < valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * alpha
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q, k, v, positions, kv_valid_len, *,
+                         block_k=512, interpret=False):
+    """q: (B,1,H,hd); k,v: (B,S,KV,hd[v]) -> (B,1,H,hdv)."""
+    B, _, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    hdv = v.shape[3]
+    G = H // KV
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    nk = S // block_k
+
+    # (B, KV, G, hd): all query heads of one kv group together
+    qt = q.reshape(B, KV, G, hd)
+    kt = k.transpose(0, 2, 1, 3)                 # (B, KV, S, hd)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_dec_kernel, block_k=block_k, nk=nk, gq=G)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, KV, nk),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd),
+                             lambda b, h, ik, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, hd),
+                             lambda b, h, ik, *_: (b, h, ik, 0)),
+                pl.BlockSpec((1, 1, block_k, hdv),
+                             lambda b, h, ik, *_: (b, h, ik, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hdv),
+                                   lambda b, h, ik, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, hdv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hdv), q.dtype),
+        interpret=interpret,
+    )(positions.astype(jnp.int32), kv_valid_len.astype(jnp.int32),
+      qt, kt, vt)
+    return out.reshape(B, 1, H, hdv)

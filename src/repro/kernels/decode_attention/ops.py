@@ -1,0 +1,18 @@
+"""Jit'd wrapper for flash-decode (inference-only: no vjp needed)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_fwd
+
+
+def decode_attention(q, k, v, *, q_positions=None, kv_valid_len=None,
+                     interpret=False):
+    B = q.shape[0]
+    S = k.shape[1]
+    pos = (q_positions[:, -1] if q_positions is not None
+           else jnp.full((B,), S - 1, jnp.int32)).astype(jnp.int32)
+    kvl = (kv_valid_len if kv_valid_len is not None
+           else jnp.full((B,), S, jnp.int32)).astype(jnp.int32)
+    return decode_attention_fwd(q, k, v, pos, kvl, interpret=interpret)

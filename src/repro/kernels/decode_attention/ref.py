@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash-decode (single-token attention over a KV
+cache)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, *, q_positions=None, kv_valid_len=None):
+    """q: (B,1,H,hd); k,v: (B,S,KV,hd). Causal == mask j <= pos."""
+    B, _, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * scale
+    idx = jnp.arange(S)
+    mask = jnp.ones((B, S), bool)
+    if q_positions is not None:
+        mask &= idx[None, :] <= q_positions[:, -1][:, None]
+    if kv_valid_len is not None:
+        mask &= idx[None, :] < kv_valid_len[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", w, v)

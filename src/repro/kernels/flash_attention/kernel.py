@@ -1,0 +1,119 @@
+"""Blocked causal flash attention (forward) for TPU.
+
+Grid (B, H, nq, nk): nk is the minor (sequential on TPU) axis; the online
+softmax state (m, l, acc) lives in VMEM scratch and is carried across nk
+steps. GQA is handled by the K/V BlockSpec index maps (q head h reads kv
+head h // G) — the grouped cache is never expanded in HBM.
+
+Block shapes: (block_q x hd) and (block_k x hd) tiles; hd is kept whole
+(128/64/192) so the MXU contraction dim is hardware-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(qoff_ref, kvlen_ref,          # scalar prefetch (SMEM)
+               q_ref, k_ref, v_ref,          # VMEM blocks
+               o_ref,                        # output block
+               m_ref, l_ref, acc_ref,        # scratch
+               *, block_q, block_k, nk, causal, scale):
+    b = pl.program_id(0)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, hdv)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = (qoff_ref[b] + iq * block_q
+             + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0))
+    k_pos = (ik * block_k
+             + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1))
+    mask = k_pos < kvlen_ref[b]
+    if causal:
+        mask &= k_pos <= q_pos
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                   # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                # (bq, bk)
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * alpha
+                    + jax.lax.dot_general(
+                        p, v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, q_offset, kv_valid_len, *, causal=True,
+                        block_q=128, block_k=128, interpret=False):
+    """q: (B,Sq,H,hd); k,v: (B,Skv,KV,hd[v]). Returns (B,Sq,H,hdv)."""
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    hdv = v.shape[3]
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0
+    nq, nk = Sq // block_q, Skv // block_k
+    scale = 1.0 / (hd ** 0.5)
+
+    # layout: heads-major so blocks are contiguous (B,H,S,hd)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_fa_kernel, block_q=block_q, block_k=block_k,
+                               nk=nk, causal=causal, scale=scale)
+    grid = (B, H, nq, nk)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, hd),
+                             lambda b, h, iq, ik, *_: (b, h, iq, 0)),
+                pl.BlockSpec((1, 1, block_k, hd),
+                             lambda b, h, iq, ik, *_: (b, h // G, ik, 0)),
+                pl.BlockSpec((1, 1, block_k, hdv),
+                             lambda b, h, iq, ik, *_: (b, h // G, ik, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, block_q, hdv),
+                                   lambda b, h, iq, ik, *_: (b, h, iq, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, hdv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hdv), q.dtype),
+        interpret=interpret,
+    )(q_offset.astype(jnp.int32), kv_valid_len.astype(jnp.int32),
+      qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,55 @@
+"""Jit'd wrapper for the flash attention kernel: shape padding, GQA
+plumbing, custom_vjp (forward = Pallas kernel; backward = VJP of the jnp
+reference — numerically identical, XLA-fused)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _norm_inputs(q, q_positions, kv_valid_len):
+    B, Sq = q.shape[0], q.shape[1]
+    if q_positions is None:
+        q_offset = jnp.zeros((B,), jnp.int32)
+    else:
+        q_offset = q_positions[:, 0].astype(jnp.int32)
+    if kv_valid_len is None:
+        kv_valid_len = jnp.full((B,), 1 << 30, jnp.int32)
+    return q_offset, kv_valid_len.astype(jnp.int32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _fa(q, k, v, q_offset, kv_valid_len, causal, interpret):
+    return flash_attention_fwd(q, k, v, q_offset, kv_valid_len,
+                               causal=causal, interpret=interpret)
+
+
+def _fa_fwd(q, k, v, q_offset, kv_valid_len, causal, interpret):
+    out = _fa(q, k, v, q_offset, kv_valid_len, causal, interpret)
+    return out, (q, k, v, q_offset, kv_valid_len)
+
+
+def _fa_bwd(causal, interpret, res, g):
+    q, k, v, q_offset, kv_valid_len = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: flash_attention_ref(
+            q_, k_, v_, q_offset=q_offset, kv_valid_len=kv_valid_len,
+            causal=causal),
+        q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None, None
+
+
+_fa.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(q, k, v, *, q_positions=None, kv_valid_len=None,
+                    causal=True, interpret=False):
+    """Public API. q: (B,Sq,H,hd); k,v: (B,Skv,KV,hd[v])."""
+    q_offset, kvl = _norm_inputs(q, q_positions, kv_valid_len)
+    return _fa(q, k, v, q_offset, kvl, causal, interpret)

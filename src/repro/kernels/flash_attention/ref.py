@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, q_offset=None, kv_valid_len=None,
+                        causal=True):
+    """q: (B,Sq,H,hd); k,v: (B,Skv,KV,hd); GQA via head repeat.
+    q_offset: (B,) absolute position of q[:,0]; kv_valid_len: (B,)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    scale = 1.0 / (hd ** 0.5)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * scale
+    skv = k.shape[1]
+    kv_idx = jnp.arange(skv)
+    if q_offset is None:
+        q_offset = jnp.zeros((B,), jnp.int32)
+    q_pos = q_offset[:, None] + jnp.arange(Sq)[None, :]
+    mask = jnp.ones((B, Sq, skv), bool)
+    if causal:
+        mask &= kv_idx[None, None, :] <= q_pos[:, :, None]
+    if kv_valid_len is not None:
+        mask &= kv_idx[None, None, :] < kv_valid_len[:, None, None]
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", w, v)

@@ -1,0 +1,3 @@
+from repro.kernels.halo_pack.ops import halo_pack, halo_unpack
+
+__all__ = ["halo_pack", "halo_unpack"]

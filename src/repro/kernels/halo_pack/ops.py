@@ -1,0 +1,18 @@
+"""Jit'd wrappers for the merged halo pack/unpack kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.halo_pack.kernel import halo_pack_fwd, halo_unpack_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def halo_pack(field, *, interpret=False):
+    return halo_pack_fwd(field, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def halo_unpack(flat, n, *, interpret=False):
+    return halo_unpack_fwd(flat, n, interpret=interpret)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the merged halo pack/unpack (= core.halo functions
+restricted to one rank's local block)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.halo import (DIRECTIONS, offsets_of, surface_slices)
+
+
+def halo_pack_ref(field, n):
+    """field: (nx,ny,nz) -> flat (total,) merged surface buffer."""
+    parts = []
+    for d in DIRECTIONS:
+        parts.append(field[surface_slices(n, d)].reshape(-1))
+    return jnp.concatenate(parts)
+
+
+def halo_unpack_ref(flat, n):
+    """flat (total,) received buffer -> (nx,ny,nz) accumulator."""
+    offs, _ = offsets_of(n)
+    acc = jnp.zeros(tuple(n), flat.dtype)
+    for d in DIRECTIONS:
+        o, s = offs[d]
+        shp = tuple(1 if dd != 0 else nd for nd, dd in zip(n, d))
+        acc = acc.at[surface_slices(n, d)].add(flat[o:o + s].reshape(shp))
+    return acc

@@ -1,0 +1,86 @@
+"""Selective-scan kernel.
+
+Grid (B, n_di, n_chunks): chunk axis sequential; the (di_blk x ds) state is
+VMEM-resident across chunks. d_inner is blocked so the working set
+(chunk x di_blk inputs + state) fits VMEM at jamba scale (d_inner 16k).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(alog_ref, dt_ref, b_ref, c_ref, x_ref, h0_ref,
+                 y_ref, hT_ref, h_ref,
+                 *, chunk, n_chunks):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    A = -jnp.exp(alog_ref[...].astype(jnp.float32))       # (di_blk, ds)
+    dt = dt_ref[0].astype(jnp.float32)                    # (c, di_blk)
+    bs = b_ref[0].astype(jnp.float32)                     # (c, ds)
+    cs = c_ref[0].astype(jnp.float32)                     # (c, ds)
+    x = x_ref[0].astype(jnp.float32)                      # (c, di_blk)
+
+    def step(t, carry):
+        h, y = carry
+        dA = jnp.exp(dt[t][:, None] * A)                  # (di_blk, ds)
+        h = dA * h + (dt[t] * x[t])[:, None] * bs[t][None, :]
+        y_t = h @ cs[t]                                   # (di_blk,)
+        y = jax.lax.dynamic_update_slice(y, y_t[None, :], (t, 0))
+        return h, y
+
+    h, y = jax.lax.fori_loop(
+        0, chunk, step,
+        (h_ref[...], jnp.zeros((chunk, x.shape[1]), jnp.float32)))
+    h_ref[...] = h
+    y_ref[0] = y
+
+    @pl.when(j == n_chunks - 1)
+    def _done():
+        hT_ref[0] = h_ref[...]
+
+
+def mamba_scan_fwd(a_log, dt, b, c, xc, h0, *, chunk=64, di_block=1024,
+                   interpret=False):
+    """a_log: (di,ds); dt,xc: (B,S,di); b,c: (B,S,ds); h0: (B,di,ds)."""
+    B, S, di = dt.shape
+    ds = a_log.shape[1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    di_block = min(di_block, di)
+    assert di % di_block == 0
+    n_chunks = S // chunk
+    n_di = di // di_block
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(B, n_di, n_chunks),
+        in_specs=[
+            pl.BlockSpec((di_block, ds), lambda bb, d, j: (d, 0)),
+            pl.BlockSpec((1, chunk, di_block), lambda bb, d, j: (bb, j, d)),
+            pl.BlockSpec((1, chunk, ds), lambda bb, d, j: (bb, j, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda bb, d, j: (bb, j, 0)),
+            pl.BlockSpec((1, chunk, di_block), lambda bb, d, j: (bb, j, d)),
+            pl.BlockSpec((1, di_block, ds), lambda bb, d, j: (bb, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, di_block), lambda bb, d, j: (bb, j, d)),
+            pl.BlockSpec((1, di_block, ds), lambda bb, d, j: (bb, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, di), jnp.float32),
+            jax.ShapeDtypeStruct((B, di, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((di_block, ds), jnp.float32)],
+        interpret=interpret,
+    )(a_log, dt, b, c, xc, h0)
+    return y.astype(xc.dtype), hT

@@ -1,0 +1,30 @@
+"""Jit'd wrapper for the selective scan: Pallas forward + reference VJP."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mamba_scan.kernel import mamba_scan_fwd
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _ms(a_log, dt, b, c, xc, h0, interpret):
+    return mamba_scan_fwd(a_log, dt, b, c, xc, h0, interpret=interpret)
+
+
+def _ms_f(a_log, dt, b, c, xc, h0, interpret):
+    return _ms(a_log, dt, b, c, xc, h0, interpret), (a_log, dt, b, c, xc, h0)
+
+
+def _ms_b(interpret, res, g):
+    _, vjp = jax.vjp(lambda *a: mamba_scan_ref(*a), *res)
+    return vjp(g)
+
+
+_ms.defvjp(_ms_f, _ms_b)
+
+
+def mamba_scan(a_log, dt, b, c, xc, h0, *, interpret=False):
+    return _ms(a_log, dt, b, c, xc, h0, interpret)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the selective scan (matches models/mamba._ssm_scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(a_log, dt, b, c, xc, h0):
+    """a_log: (di,ds); dt,xc: (B,S,di); b,c: (B,S,ds); h0: (B,di,ds) f32.
+    Returns (y (B,S,di) xc.dtype, hT (B,di,ds) f32)."""
+    A = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp
+        dt_f = dt_t.astype(jnp.float32)
+        dA = jnp.exp(dt_f[:, :, None] * A[None])
+        dBx = (dt_f * x_t.astype(jnp.float32))[:, :, None] \
+            * b_t.astype(jnp.float32)[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bds,bs->bd", h, c_t.astype(jnp.float32))
+        return h, y
+
+    xs = (dt.transpose(1, 0, 2), b.transpose(1, 0, 2),
+          c.transpose(1, 0, 2), xc.transpose(1, 0, 2))
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2).astype(xc.dtype), hT

@@ -1,0 +1,90 @@
+"""WKV6 recurrence kernel (data-dependent per-channel decay).
+
+Grid (B*H, n_chunks): the chunk axis is the sequential minor dim; the
+(hd x hd) state lives in VMEM scratch and is carried across chunks. The
+inner chunk loop is sequential (the recurrence is), but all loads/stores
+are chunk-granular VMEM blocks — HBM sees each element exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
+                y_ref, sT_ref, s_ref,
+                *, chunk, n_chunks):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        s_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)      # (c, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = jnp.exp(lw_ref[0].astype(jnp.float32))
+    u = u_ref[0].astype(jnp.float32)      # (hd,)
+
+    def step(t, carry):
+        s, y = carry
+        r_t, k_t, v_t, w_t = r[t], k[t], v[t], w[t]
+        bonus = jnp.sum(r_t * u * k_t)
+        y_t = r_t @ s + bonus * v_t
+        s = w_t[:, None] * s + k_t[:, None] * v_t[None, :]
+        y = jax.lax.dynamic_update_slice(y, y_t[None, :], (t, 0))
+        return s, y
+
+    s, y = jax.lax.fori_loop(
+        0, chunk, step,
+        (s_ref[...], jnp.zeros((chunk, r.shape[1]), jnp.float32)))
+    s_ref[...] = s
+    y_ref[0] = y
+
+    @pl.when(j == n_chunks - 1)
+    def _done():
+        sT_ref[0] = s_ref[...]
+
+
+def wkv6_fwd(r, k, v, logw, u, s0, *, chunk=64, interpret=False):
+    """r,k,v,logw: (B,S,H,hd); u: (H,hd); s0: (B,H,hd,hd) f32."""
+    B, S, H, hd = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+
+    def fold(a):   # (B,S,H,hd) -> (B*H, S, hd)
+        return a.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+    rf, kf, vf, lwf = fold(r), fold(k), fold(v), fold(logw)
+    s0f = s0.reshape(B * H, hd, hd)
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, sT = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, hd), lambda i, j: (i % H, 0)),   # u per head
+            pl.BlockSpec((1, hd, hd), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, hd, hd), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, lwf, u, s0f)
+    y = y.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return y, sT.reshape(B, H, hd, hd)

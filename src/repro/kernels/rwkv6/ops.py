@@ -1,0 +1,33 @@
+"""Jit'd wrapper for WKV6: Pallas forward + reference VJP."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.kernel import wkv6_fwd
+from repro.kernels.rwkv6.ref import wkv6_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _wkv(r, k, v, logw, u, s0, interpret):
+    return wkv6_fwd(r, k, v, logw, u, s0, interpret=interpret)
+
+
+def _wkv_f(r, k, v, logw, u, s0, interpret):
+    out = _wkv(r, k, v, logw, u, s0, interpret)
+    return out, (r, k, v, logw, u, s0)
+
+
+def _wkv_b(interpret, res, g):
+    r, k, v, logw, u, s0 = res
+    _, vjp = jax.vjp(lambda *a: wkv6_ref(*a), r, k, v, logw, u, s0)
+    return vjp(g)
+
+
+_wkv.defvjp(_wkv_f, _wkv_b)
+
+
+def wkv6(r, k, v, logw, u, s0, *, interpret=False):
+    return _wkv(r, k, v, logw, u, s0, interpret)

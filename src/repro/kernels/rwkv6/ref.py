@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the WKV6 recurrence (matches models/rwkv._wkv_scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, logw, u, s0):
+    """r,k,v,logw: (B,S,H,hd); u: (H,hd); s0: (B,H,hd,hd) f32.
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns (y (B,S,H,hd) f32, sT (B,H,hd,hd) f32)."""
+    def step(s, inp):
+        r_t, k_t, v_t, lw_t = [a.astype(jnp.float32) for a in inp]
+        w_t = jnp.exp(lw_t)
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhc,bhcv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, logw))
+    sT, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3), sT

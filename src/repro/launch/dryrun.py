@@ -1,0 +1,77 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+Proves the distribution config is coherent without hardware: lowers and
+compiles every (architecture x input shape) cell on the production meshes
+(16x16 single pod, 2x16x16 multi-pod), printing memory_analysis() and
+cost_analysis(), and records roofline terms to JSON.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all --out results/dryrun   # full sweep
+Each --all cell runs in a fresh subprocess (compile-state isolation).
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--moe-impl", default="gshard")
+    ap.add_argument("--overrides", default=None,
+                    help="JSON dict of sharding-rule overrides (hillclimb)")
+    ap.add_argument("--light", action="store_true",
+                    help="single compile, no probe (multi-pod default)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        from repro.configs import ARCH_IDS, SHAPES
+        cells = [(a, s, mp) for a in ARCH_IDS for s in SHAPES
+                 for mp in (False, True)]
+        for arch, shape, mp in cells:
+            mesh = "2x16x16" if mp else "16x16"
+            path = os.path.join(args.out, f"{arch}__{shape}__{mesh}.json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"skip {arch} {shape} {mesh}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--out", args.out,
+                   "--moe-impl", args.moe_impl]
+            if mp:
+                cmd += ["--multi-pod", "--light"]
+            print(f"== {arch} {shape} {mesh}", flush=True)
+            subprocess.run(cmd, env={**os.environ,
+                                     "PYTHONPATH": os.environ.get(
+                                         "PYTHONPATH", "src")})
+        return
+
+    from repro.launch.dryrun_lib import run_cell, save_record
+    overrides = json.loads(args.overrides) if args.overrides else None
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   overrides=overrides, moe_impl=args.moe_impl,
+                   light=args.light)
+    path = save_record(rec, args.out)
+    brief = {k: rec.get(k) for k in
+             ("arch", "shape", "mesh", "status", "compile_s", "roofline",
+              "memory", "collectives", "useful_flops_ratio", "error")}
+    print(json.dumps(brief, indent=1))
+    print(f"-> {path}")
+    if rec.get("status") == "error":
+        print(rec.get("traceback", ""), file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

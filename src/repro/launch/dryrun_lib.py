@@ -1,0 +1,388 @@
+"""Dry-run cell logic (imported by dryrun.py AFTER the XLA_FLAGS env var is
+set — never import this module first in a fresh process that needs 512
+devices).
+
+Cost-accounting methodology (CPU container, no hardware):
+  XLA's cost_analysis counts while-loop bodies ONCE, so a scanned-layer
+  model under-reports by ~num_layers. We therefore compile TWO artifacts
+  per cell:
+    1. the real step (layers scanned)  -> memory_analysis + one-body costs
+    2. a one-unit "body probe" (same shardings, unrolled inner scans)
+       -> exact per-layer-unit flops/bytes/collectives
+  and combine:  total = step + (repeats-1) * probe   (x grad_accum for
+  train; the optimizer update outside the accum loop is then over-counted
+  by (accum-1)x, a <1% effect noted in EXPERIMENTS.md).
+  Mamba/RWKV recurrences stay as while-loops even in the probe (S-step
+  loops cannot unroll); their flops/bytes are added analytically
+  (recurrence_addendum) — exact closed forms, documented.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.launch.hlo_analysis import (collective_stats,
+                                       upcast_dot_bytes)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import HBM_PER_CHIP, model_flops, terms_from
+from repro.launch.specs import (abstract_cache, abstract_model, batch_pspecs,
+                                batch_specs, cache_pspecs)
+from repro.models import model_specs
+from repro.models.params import abstract_params, is_spec
+from repro.optim import opt_init_specs
+from repro.sharding.rules import make_rules
+from repro.train.steps import (effective_accum, make_decode_step,
+                               make_prefill_step, make_train_step)
+
+
+def shardings_of(spec_tree, rules):
+    return jax.tree.map(lambda s: rules.sharding(s.axes), spec_tree,
+                        is_leaf=is_spec)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Step lowering (the artifact that must compile = deliverable (e))
+# ---------------------------------------------------------------------------
+
+def build_lowered(arch: str, shape_name: str, *, multi_pod: bool = False,
+                  overrides=None, moe_impl: str = "gshard", cfg_edit=None,
+                  unroll_inner: bool = True):
+    """Lower the cell's step function on the production mesh.
+
+    Returns (lowered, meta) or (None, skip-record).
+    """
+    cfg = get_config(arch)
+    cfg = dataclasses.replace(cfg, unroll_inner=unroll_inner)
+    if cfg_edit is not None:
+        cfg = cfg_edit(cfg)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        return None, {
+            "arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "status": "skipped",
+            "reason": "long_500k requires sub-quadratic attention "
+                      "(DESIGN.md §4.1)",
+        }
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(cfg, shape, mesh, overrides=overrides)
+    specs = model_specs(cfg)
+    pshard = shardings_of(specs, rules)
+    bshard = {k: jax.sharding.NamedSharding(mesh, v)
+              for k, v in batch_pspecs(cfg, shape, rules).items()}
+    abatch = batch_specs(cfg, shape)
+
+    if shape.kind == "train":
+        aparams = abstract_model(cfg)
+        ospecs = opt_init_specs(cfg, specs)
+        aopt = abstract_params(ospecs, dtype=None)
+        oshard = shardings_of(ospecs, rules)
+        step = make_train_step(cfg, rules, moe_impl=moe_impl,
+                               global_batch=shape.global_batch)
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(aparams, aopt, abatch)
+    elif shape.kind == "prefill":
+        aparams = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
+            abstract_model(cfg))
+        step = make_prefill_step(cfg, rules, moe_impl=moe_impl)
+        cshard = jax.tree.map(
+            lambda p: jax.sharding.NamedSharding(mesh, p),
+            cache_pspecs(cfg, shape, rules))
+        jitted = jax.jit(step, in_shardings=(pshard, bshard),
+                         out_shardings=(None, cshard))
+        lowered = jitted.lower(aparams, abatch)
+    else:  # decode
+        aparams = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
+            abstract_model(cfg))
+        acache = abstract_cache(cfg, shape)
+        cshard = jax.tree.map(
+            lambda p: jax.sharding.NamedSharding(mesh, p),
+            cache_pspecs(cfg, shape, rules))
+        step = make_decode_step(cfg, rules, moe_impl=moe_impl)
+        jitted = jax.jit(step, in_shardings=(pshard, bshard, cshard),
+                         out_shardings=(None, cshard),
+                         donate_argnums=(2,))
+        lowered = jitted.lower(aparams, abatch, acache)
+
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "kind": shape.kind, "cfg": cfg, "shape_cfg": shape,
+            "rules": rules, "mesh_obj": mesh, "moe_impl": moe_impl}
+    return lowered, meta
+
+
+# ---------------------------------------------------------------------------
+# One-unit body probe (exact per-layer costs)
+# ---------------------------------------------------------------------------
+
+def build_body_probe(meta):
+    """Lower ONE repetition of the scanned layer unit at the cell's exact
+    shapes/shardings. Returns (lowered, repeats) or (None, 0)."""
+    from repro.models.model import (_apply_block, _block_cache_specs,
+                                    _block_specs, _maybe_remat)
+    cfg, shape, rules, mesh = (meta["cfg"], meta["shape_cfg"], meta["rules"],
+                               meta["mesh_obj"])
+    moe_impl = meta["moe_impl"]
+    groups = cfg.layer_groups()
+    if groups.repeats <= 1:
+        return None, groups.repeats
+
+    unit_specs = [_block_specs(cfg, sp, cfg.d_ff) for sp in groups.unit]
+    kind = shape.kind
+    pdtype = jnp.float32 if kind == "train" else jnp.bfloat16
+    au = [abstract_params(s, dtype=pdtype) for s in unit_specs]
+    ush = [shardings_of(s, rules) for s in unit_specs]
+
+    if kind == "train":
+        B = shape.global_batch // effective_accum(cfg, rules,
+                                                  shape.global_batch)
+        S = shape.seq_len
+    elif kind == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+    else:
+        B, S = shape.global_batch, 1
+
+    cdt = jnp.dtype(cfg.compute_dtype)
+    ax = _sds((B, S, cfg.d_model), cdt)
+    xsh = rules.sharding(("batch", "seq_act", None)
+                         if kind != "decode" else ("batch", None, None))
+    apos = _sds((B, S), jnp.int32)
+    possh = rules.sharding(("batch", None))
+    vis = None
+    vsh = None
+    if cfg.vision is not None and cfg.family == "vlm":
+        vis = _sds((B, cfg.vision.num_tokens, cfg.d_model), cdt)
+        vsh = rules.sharding(("batch", None, None))
+
+    acaches = None
+    cshs = None
+    if kind != "train":
+        craw = [_block_cache_specs(cfg, sp, B, shape.seq_len, jnp.bfloat16)
+                for sp in groups.unit]
+        acaches = [abstract_params(c, dtype=None) for c in craw]
+        cshs = [shardings_of(c, rules) for c in craw]
+
+    def unit_once(uparams, x, positions, caches, vision):
+        ncs = []
+        for pos_i, sp in enumerate(groups.unit):
+            x, nc, _aux = _apply_block(
+                cfg, sp, uparams[pos_i], x, rules=rules, positions=positions,
+                cache=None if caches is None else caches[pos_i],
+                vision=vision, moe_impl=moe_impl)
+            ncs.append(nc)
+        return x, tuple(ncs)
+
+    if kind == "train":
+        def probe(uparams, x, positions, vision):
+            def f(up, x_):
+                body = _maybe_remat(
+                    cfg, lambda xx: unit_once(up, xx, positions, None,
+                                              vision)[0])
+                out = body(x_)
+                return jnp.sum(out.astype(jnp.float32))
+            val, grads = jax.value_and_grad(f, argnums=(0, 1))(uparams, x)
+            return grads
+
+        args = [tuple(au), ax, apos] + ([vis] if vis is not None else [None])
+        shs = (tuple(ush), xsh, possh, vsh)
+        jitted = jax.jit(probe, in_shardings=shs,
+                         out_shardings=((tuple(ush), xsh)))
+        lowered = jitted.lower(*args)
+    else:
+        def probe(uparams, x, positions, caches, vision):
+            out, ncs = unit_once(uparams, x, positions, caches, vision)
+            return out, ncs
+
+        shs = (tuple(ush), xsh, possh, tuple(cshs), vsh)
+        jitted = jax.jit(probe, in_shardings=shs,
+                         out_shardings=(xsh, tuple(cshs)))
+        lowered = jitted.lower(tuple(au), ax, apos, tuple(acaches), vis)
+    return lowered, groups.repeats
+
+
+# ---------------------------------------------------------------------------
+# Analytic recurrence addendum (mamba / rwkv while-loops)
+# ---------------------------------------------------------------------------
+
+def recurrence_addendum(cfg, shape, chips: int) -> dict:
+    """Exact flops/bytes of the sequential recurrences that stay inside
+    while-loops (per device, per step, fwd+bwd for train)."""
+    specs = cfg.layer_specs()
+    n_mamba = sum(1 for m, _ in specs if m == "mamba")
+    n_rwkv = sum(1 for m, _ in specs if m == "rwkv")
+    if not (n_mamba or n_rwkv):
+        return {"flops": 0.0, "bytes": 0.0}
+    B = shape.global_batch
+    S = 1 if shape.kind == "decode" else shape.seq_len
+    mult = 3.0 if shape.kind == "train" else 1.0  # bwd ~ 2x fwd
+    fl = by = 0.0
+    if n_mamba:
+        di = cfg.mamba.expand * cfg.d_model
+        ds = cfg.mamba.d_state
+        fl += n_mamba * B * S * di * ds * 9.0          # dA,h update,y dot
+        by += n_mamba * B * S * di * ds * 8.0          # f32 state rd+wr
+    if n_rwkv:
+        H = cfg.d_model // cfg.rwkv.head_size
+        hd = cfg.rwkv.head_size
+        fl += n_rwkv * B * S * H * hd * hd * 8.0
+        by += n_rwkv * B * S * H * hd * hd * 8.0
+    return {"flops": fl * mult / chips, "bytes": by * mult / chips}
+
+
+# ---------------------------------------------------------------------------
+# Analysis
+# ---------------------------------------------------------------------------
+
+def _cost_of(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)))
+
+
+def analyze_compiled(compiled, meta, probe_compiled=None, repeats=0,
+                     mem_compiled=None) -> dict:
+    flops, byts = _cost_of(compiled)
+    coll = collective_stats(compiled.as_text())
+    coll_bytes = float(coll.total_bytes)
+
+    probe_d = None
+    if probe_compiled is not None and repeats > 1:
+        pf, pb = _cost_of(probe_compiled)
+        pcoll = collective_stats(probe_compiled.as_text())
+        flops += (repeats - 1) * pf
+        byts += (repeats - 1) * pb
+        coll_bytes += (repeats - 1) * pcoll.total_bytes
+        probe_d = {"flops": pf, "bytes": pb,
+                   "collective_bytes": pcoll.total_bytes,
+                   "repeats": repeats}
+
+    accum_scale = (effective_accum(meta["cfg"], meta["rules"],
+                                   meta["shape_cfg"].global_batch)
+                   if meta["kind"] == "train" else 1)
+    flops *= accum_scale
+    byts *= accum_scale
+    coll_bytes *= accum_scale
+
+    chips = 512 if meta["mesh"] == "2x16x16" else 256
+    add = recurrence_addendum(meta["cfg"], meta["shape_cfg"], chips)
+    flops += add["flops"]
+    byts += add["bytes"]
+
+    try:
+        mc = mem_compiled if mem_compiled is not None else compiled
+        mem = mc.memory_analysis()
+        mem_d = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        }
+        # XLA:CPU materializes f32 copies of bf16 dot operands; the TPU MXU
+        # consumes bf16 natively, so exclude those buffers from the target
+        # estimate (raw figures kept alongside).
+        upcast = upcast_dot_bytes(mc.as_text())
+        mem_d["cpu_f32_upcast_bytes"] = int(upcast)
+        temp_tpu = max(mem_d["temp_bytes"] - upcast, 0)
+        mem_d["temp_bytes_tpu_est"] = int(temp_tpu)
+        peak = (max(mem_d["argument_bytes"], mem_d["output_bytes"])
+                + temp_tpu)
+        mem_d["peak_bytes_est"] = int(peak)
+        mem_d["fits_16gb"] = bool(peak <= HBM_PER_CHIP)
+    except Exception as e:  # pragma: no cover
+        mem_d = {"error": repr(e)}
+
+    terms = terms_from(flops, byts, coll_bytes)
+    cfg, shape = meta["cfg"], meta["shape_cfg"]
+    mflops = model_flops(cfg, shape)
+    hlo_flops_global = flops * chips
+    return {
+        "arch": meta["arch"], "shape": meta["shape"], "mesh": meta["mesh"],
+        "kind": meta["kind"], "status": "ok", "chips": chips,
+        "flops_per_device": flops,
+        "bytes_per_device": byts,
+        "collective_bytes_per_device": coll_bytes,
+        "accum_scale": accum_scale,
+        "collectives": coll.to_dict(),
+        "probe": probe_d,
+        "recurrence_addendum": add,
+        "memory": mem_d,
+        "roofline": terms.to_dict(),
+        "model_flops_global": mflops,
+        "useful_flops_ratio": (mflops / hlo_flops_global
+                               if hlo_flops_global else 0.0),
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             overrides=None, moe_impl: str = "gshard", cfg_edit=None,
+             light: bool = False) -> dict:
+    """light=True: single compile (the real artifact), memory +
+    collective capture, NO probe/unroll cost scaling — used for the
+    multi-pod mesh whose purpose is proving compilation; roofline terms
+    come from the single-pod cells."""
+    t0 = time.time()
+    try:
+        # pass 1: the REAL artifact (scanned, nothing unrolled) -> memory
+        lowered_mem, meta = build_lowered(
+            arch, shape_name, multi_pod=multi_pod, overrides=overrides,
+            moe_impl=moe_impl, cfg_edit=cfg_edit, unroll_inner=False)
+        if lowered_mem is None:
+            return meta
+        compiled_mem = lowered_mem.compile()
+        t1 = time.time()
+        if light:
+            rec = analyze_compiled(compiled_mem, meta, None, 0,
+                                   mem_compiled=compiled_mem)
+            rec["light"] = True
+            rec["compile_s"] = round(t1 - t0, 2)
+            return rec
+        # pass 2: inner scans unrolled -> accurate cost accounting
+        lowered, meta = build_lowered(
+            arch, shape_name, multi_pod=multi_pod, overrides=overrides,
+            moe_impl=moe_impl, cfg_edit=cfg_edit, unroll_inner=True)
+        compiled = lowered.compile()
+        t2 = time.time()
+        probe_lowered, repeats = build_body_probe(meta)
+        probe_compiled = (probe_lowered.compile()
+                          if probe_lowered is not None else None)
+        t3 = time.time()
+        rec = analyze_compiled(compiled, meta, probe_compiled, repeats,
+                               mem_compiled=compiled_mem)
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+        rec["probe_compile_s"] = round(t3 - t2, 2)
+        if overrides:
+            rec["overrides"] = overrides
+        return rec
+    except Exception as e:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "error", "error": repr(e),
+                "traceback": traceback.format_exc()[-4000:],
+                "elapsed_s": round(time.time() - t0, 2)}
+
+
+def save_record(rec: dict, out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1)
+    return os.path.join(out_dir, name)

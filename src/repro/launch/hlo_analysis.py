@@ -1,0 +1,181 @@
+"""Parse compiled (post-SPMD, per-device) HLO text for collective traffic.
+
+Sums operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction. Shapes in compiled HLO are
+per-device shards, so the totals here are bytes injected into the
+interconnect PER DEVICE per executed program.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# "%name = f32[128,256]{1,0} op-name(...)" or tuple types
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+"
+                     r"([\w\-]+)\((.*)\)")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * b
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+    count_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def to_dict(self):
+        return {"total_bytes": self.total_bytes,
+                "total_count": self.total_count,
+                "bytes_by_kind": dict(self.bytes_by_kind),
+                "count_by_kind": dict(self.count_by_kind)}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Scan compiled HLO; for each collective sum its OPERAND bytes
+    (we look up each operand id's defining type)."""
+    # Pass 1: map instruction name -> result type string.
+    types: dict = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            types[m.group(1)] = m.group(2)
+
+    stats = CollectiveStats()
+    operand_re = re.compile(r"%?([\w\.\-]+)")
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        op = m.group(3)
+        kind = None
+        for k in COLLECTIVE_KINDS:
+            if op == k or op.startswith(k + "-start") or op == k + "-done":
+                kind = k
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # bytes counted at the -start
+        arg_str = m.group(4)
+        # operands are "%name" tokens before any attribute (split at first
+        # "), " attr boundary is messy; just take leading %refs)
+        byts = 0
+        for tok in arg_str.split(","):
+            tok = tok.strip()
+            if not tok.startswith("%"):
+                # compiled HLO may omit % on operands; check name map
+                name = operand_re.match(tok)
+                if not (name and name.group(1) in types):
+                    continue
+                ref = name.group(1)
+            else:
+                ref = tok[1:].split(")")[0].split(" ")[0]
+            if ref in types:
+                byts += _shape_bytes(types[ref])
+        if byts == 0:
+            # fall back: result size (all-reduce result == operand size)
+            byts = _shape_bytes(m.group(2))
+        stats.bytes_by_kind[kind] += byts
+        stats.count_by_kind[kind] += 1
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# CPU-backend bf16 artifact: XLA:CPU materializes f32 copies of bf16 dot
+# operands (convert ops with buffer allocations). TPU's MXU consumes bf16
+# natively, so these buffers do not exist on the target hardware. We count
+# big convert(bf16->f32) results that feed dots and report them so the
+# memory check can be corrected (see dryrun_lib.analyze_compiled).
+# ---------------------------------------------------------------------------
+
+_CONV_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*f32\[([\d,]*)\][^=]*"
+                      r"\bconvert\(\s*%?([\w\.\-]+)")
+
+
+def upcast_dot_bytes(hlo_text: str, min_bytes: int = 16 * 2**20) -> int:
+    """Bytes of large f32 buffers created by convert(bf16) whose results
+    feed dot/einsum ops — TPU-nonexistent CPU lowering artifacts."""
+    types: dict = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            types[m.group(1)] = m.group(2)
+    converts = {}
+    for line in hlo_text.splitlines():
+        m = _CONV_RE.match(line)
+        if not m:
+            continue
+        name, dims, operand = m.group(1), m.group(2), m.group(3)
+        op_t = types.get(operand, "")
+        if not op_t.startswith("bf16"):
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = n * 4
+        if b >= min_bytes:
+            converts[name] = b
+    total = 0
+    if converts:
+        # converts feeding dots or dynamic-update-slices are native-bf16 on
+        # TPU (MXU consumes bf16; dus has no dtype restriction there)
+        fed = set()
+        for line in hlo_text.splitlines():
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            op = m.group(3)
+            if ("dot" not in op and "fusion" not in op
+                    and "dynamic-update-slice" not in op):
+                continue
+            for name in converts:
+                if ("%" + name) in m.group(4) or (" " + name) in m.group(4):
+                    fed.add(name)
+        total += sum(converts[n] for n in fed)
+    # f32 dus outputs whose update operand came from a counted convert hold
+    # bf16 data on TPU: count half their bytes as artifact.
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m or m.group(3) != "dynamic-update-slice":
+            continue
+        t = m.group(2)
+        if not t.startswith("f32"):
+            continue
+        for name in converts:
+            if ("%" + name) in m.group(4):
+                total += _shape_bytes(t) // 2
+                break
+    return total

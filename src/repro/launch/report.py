@@ -1,0 +1,85 @@
+"""Generate EXPERIMENTS.md tables from results/dryrun JSON records.
+
+  python -m repro.launch.report --dir results/dryrun --md
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def load_records(d):
+    recs = []
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            recs.append(json.load(open(os.path.join(d, name))))
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.1f}G" if b >= 2**30 else f"{b/2**20:.0f}M"
+
+
+def dryrun_table(recs, mesh=None):
+    rows = ["| arch | shape | mesh | status | peak/dev | fits 16G | "
+            "coll bytes/dev | coll ops |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"skipped (sub-quadratic only) | — | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"ERROR | — | — | — | — |")
+            continue
+        m = r["memory"]
+        c = r["collectives"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{fmt_bytes(m.get('peak_bytes_est', 0))} | "
+            f"{'yes' if m.get('fits_16gb') else 'NO'} | "
+            f"{fmt_bytes(r.get('collective_bytes_per_device', 0))} | "
+            f"{c.get('total_count', 0)} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs, mesh="16x16"):
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "dominant | bound step s | roofline frac | useful flops |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3f} | "
+            f"{rf['memory_s']:.3f} | {rf['collective_s']:.3f} | "
+            f"{rf['dominant']} | {rf['step_s']:.3f} | "
+            f"{rf['roofline_fraction']:.3f} | "
+            f"{r['useful_flops_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--what", default="both",
+                    choices=["both", "dryrun", "roofline"])
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    if args.what in ("both", "dryrun"):
+        print("### Dry-run records\n")
+        print(dryrun_table(recs, args.mesh))
+        print()
+    if args.what in ("both", "roofline"):
+        print("### Roofline (single pod, 16x16)\n")
+        print(roofline_table(recs, "16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Roofline terms from dry-run artifacts.
+
+TPU v5e-class hardware constants (per chip):
+  peak bf16 compute  : 197 TFLOP/s
+  HBM bandwidth      : 819 GB/s
+  ICI link bandwidth : ~50 GB/s per link
+
+cost_analysis()/memory_analysis() on the compiled SPMD module are
+per-device quantities; collective bytes from hlo_analysis are per-device
+too. Terms (seconds, per executed step):
+
+  compute    = flops_per_device / PEAK_FLOPS
+  memory     = bytes_per_device / HBM_BW
+  collective = collective_bytes_per_device / LINK_BW
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_PER_CHIP = 16 * 2**30  # v5e: 16 GiB
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Perfect-overlap step-time lower bound."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the bound step spent on useful math."""
+        if self.step_s == 0:
+            return 0.0
+        return self.compute_s / self.step_s
+
+    def to_dict(self):
+        return {"compute_s": self.compute_s, "memory_s": self.memory_s,
+                "collective_s": self.collective_s, "dominant": self.dominant,
+                "step_s": self.step_s,
+                "roofline_fraction": self.roofline_fraction}
+
+
+def terms_from(flops_per_device: float, bytes_per_device: float,
+               collective_bytes_per_device: float) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_per_device / PEAK_FLOPS,
+        memory_s=bytes_per_device / HBM_BW,
+        collective_s=collective_bytes_per_device / LINK_BW,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (fwd-only), where
+    D = tokens processed per step."""
+    n_active = cfg.param_counts()["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

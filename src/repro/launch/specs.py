@@ -1,0 +1,71 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input, per
+(arch, shape) cell — weak-type-correct, shardable, no device allocation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, ShapeConfig
+from repro.models import abstract_params, cache_specs, model_specs
+from repro.models.params import param_pspecs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract input batch for a (cfg, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        d = {"tokens": _sds((B, 1), jnp.int32),
+             "positions": _sds((B, 1), jnp.int32)}
+        if cfg.family == "vlm":
+            d["vision"] = _sds((B, cfg.vision.num_tokens, cfg.vision.raw_dim),
+                               jnp.bfloat16)
+        return d
+    d = {"positions": _sds((B, S), jnp.int32)}
+    if cfg.family == "audio":
+        d["frames"] = _sds((B, S, cfg.vision.raw_dim), jnp.bfloat16)
+    else:
+        d["tokens"] = _sds((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        d["vision"] = _sds((B, cfg.vision.num_tokens, cfg.vision.raw_dim),
+                           jnp.bfloat16)
+    if shape.kind == "train":
+        d["targets"] = _sds((B, S), jnp.int32)
+    return d
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, rules) -> dict:
+    ax = {
+        "tokens": ("batch", None),
+        "targets": ("batch", None),
+        "positions": ("batch", None),
+        "frames": ("batch", None, None),
+        "vision": ("batch", None, None),
+    }
+    return {k: rules.pspec(ax[k]) for k in batch_specs(cfg, shape)}
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
+    return abstract_params(
+        cache_specs(cfg, shape.global_batch, shape.seq_len), dtype=None)
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, rules):
+    return param_pspecs(
+        cache_specs(cfg, shape.global_batch, shape.seq_len), rules)
+
+
+def abstract_model(cfg: ModelConfig):
+    specs = model_specs(cfg)
+    return abstract_params(specs, dtype=jnp.dtype(cfg.param_dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """All abstract inputs for the cell's step function (sans params)."""
+    out = {"batch": batch_specs(cfg, shape)}
+    if shape.kind == "decode":
+        out["cache"] = abstract_cache(cfg, shape)
+    return out

@@ -1,0 +1,22 @@
+from repro.models.model import (
+    model_specs,
+    cache_specs,
+    forward,
+    logits_from_hidden,
+    lm_loss,
+)
+from repro.models.params import (
+    ParamSpec,
+    abstract_params,
+    init_params,
+    param_axes,
+    param_count,
+    param_pspecs,
+    stack_specs,
+)
+
+__all__ = [
+    "model_specs", "cache_specs", "forward", "logits_from_hidden", "lm_loss",
+    "ParamSpec", "abstract_params", "init_params", "param_axes",
+    "param_count", "param_pspecs", "stack_specs",
+]

@@ -1,0 +1,262 @@
+"""GQA / MQA / cross attention with KV cache, qk-norm, RoPE.
+
+Three attention-core implementations selected by cfg.attn_impl:
+  * "xla"              — query-chunked attention in pure jnp (dry-run path)
+  * "pallas"           — Pallas flash kernel (TPU target)
+  * "pallas_interpret" — the same kernel, interpret=True (CPU validation)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rmsnorm_nl
+from repro.models.params import ParamSpec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg, cross: bool = False) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s = {
+        "wq": ParamSpec((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((hd,), (None,), init="ones")
+        s["k_norm"] = ParamSpec((hd,), (None,), init="ones")
+    if cross:
+        # tanh-gated residual (llama-3.2-vision style)
+        s["gate"] = ParamSpec((), (), init="zeros")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Attention core (query-chunked, grouped)
+# ---------------------------------------------------------------------------
+
+def _attend_dense(q, k, v, q_pos, kv_valid_len, causal, scale):
+    """q: (B,Sq,H,hd); k,v: (B,Skv,H,hd) (kv pre-expanded to H so the head
+    dim shards cleanly over "model"). Full-Skv scores."""
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * scale
+    skv = k.shape[1]
+    kv_idx = jnp.arange(skv)
+    mask = jnp.ones((q.shape[0], q.shape[1], skv), dtype=bool)
+    if causal:
+        mask &= kv_idx[None, None, :] <= q_pos[:, :, None]
+    if kv_valid_len is not None:
+        mask &= kv_idx[None, None, :] < kv_valid_len[:, None, None]
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", w, v)
+    return out
+
+
+def _attend_grouped(q, k, v, q_pos, kv_valid_len, causal, scale):
+    """Non-expanding GQA attention for decode: q grouped (B,Sq,KV,G,hd)
+    against the raw (B,Skv,KV,hd) cache — the expanded KV is never
+    materialized (8x the cache at llama-90b decode_32k)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg,
+                        k).astype(jnp.float32) * scale
+    skv = k.shape[1]
+    kv_idx = jnp.arange(skv)
+    mask = jnp.ones((B, Sq, skv), dtype=bool)
+    if causal:
+        mask &= kv_idx[None, None, :] <= q_pos[:, :, None]
+    if kv_valid_len is not None:
+        mask &= kv_idx[None, None, :] < kv_valid_len[:, None, None]
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+def _expand_kv(k, H):
+    """(B,S,KV,hd) -> (B,S,H,hd), repeating each kv head H/KV times.
+    Keeps the head axis aligned with q heads so a 'heads->model' shard
+    constraint partitions both identically (GQA groups never straddle
+    a model shard because KV divides H)."""
+    B, S, KV, hd = k.shape
+    G = H // KV
+    if G == 1:
+        return k
+    return jnp.repeat(k, G, axis=2)
+
+
+def attention_core_xla(q, k, v, *, q_positions, kv_valid_len=None,
+                       causal=True, chunk_q: int = 512, unroll=False):
+    """q (B,Sq,H,hd), k/v (B,Skv,KVH,hd), q_positions (B,Sq) absolute.
+
+    Chunked over Sq via lax.scan so the (Sq, Skv) score matrix is never
+    fully materialized (XLA-level flash; the Pallas kernel also tiles Skv).
+    """
+    B, Sq, H, hd = q.shape
+    hd_v = v.shape[-1]          # may differ from hd (MLA)
+    scale = 1.0 / (hd ** 0.5)
+    if Sq <= 8:                 # decode: never expand the KV cache
+        return _attend_grouped(q, k, v, q_positions, kv_valid_len, causal,
+                               scale)
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+
+    if Sq <= max(chunk_q, 16) or Sq % chunk_q != 0:
+        return _attend_dense(q, k, v, q_positions, kv_valid_len, causal,
+                             scale)
+
+    n = Sq // chunk_q
+    qs = q.reshape(B, n, chunk_q, H, hd).transpose(1, 0, 2, 3, 4)
+    ps = q_positions.reshape(B, n, chunk_q).transpose(1, 0, 2)
+
+    def body(_, qp):
+        qc, pc = qp
+        oc = _attend_dense(qc, k, v, pc, kv_valid_len, causal, scale)
+        return None, oc
+
+    _, outs = jax.lax.scan(body, None, (qs, ps), unroll=True if unroll else 1)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd_v)
+
+
+def attention_core(cfg, q, k, v, **kw):
+    impl = cfg.attn_impl
+    if impl == "xla":
+        return attention_core_xla(q, k, v, unroll=cfg.unroll_inner, **kw)
+    from repro.kernels.flash_attention import ops as fa_ops
+    interpret = impl == "pallas_interpret"
+    if q.shape[1] == 1:
+        from repro.kernels.decode_attention import ops as da_ops
+        return da_ops.decode_attention(
+            q, k, v, q_positions=kw["q_positions"],
+            kv_valid_len=kw.get("kv_valid_len"), interpret=interpret)
+    return fa_ops.flash_attention(
+        q, k, v, q_positions=kw["q_positions"],
+        kv_valid_len=kw.get("kv_valid_len"),
+        causal=kw.get("causal", True), interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+def attn_cache_specs(cfg, batch: int, max_len: int, cross: bool = False,
+                     n_vis: int = 0):
+    """Returns {name: (shape, logical_axes)} for this layer's cache."""
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    if cross:
+        return {
+            "ck": ((batch, n_vis, KV, hd),
+                   ("batch", "vis_tokens", "kv_heads", "head_dim")),
+            "cv": ((batch, n_vis, KV, hd),
+                   ("batch", "vis_tokens", "kv_heads", "head_dim")),
+        }
+    return {
+        "k": ((batch, max_len, KV, hd),
+              ("batch", "kv_seq", "kv_heads", "head_dim")),
+        "v": ((batch, max_len, KV, hd),
+              ("batch", "kv_seq", "kv_heads", "head_dim")),
+    }
+
+
+def _update_cache(cache_k, k_new, pos):
+    """Per-sequence cache update at positions pos (B,).
+
+    Three partition-friendly paths:
+      * full overwrite (prefill writes the whole range): no read at all;
+      * S==1 (decode): elementwise where-mask — works with ANY sharding of
+        the sequence dim (a dynamic_update_slice at a traced index forces
+        SPMD to all-gather a sharded cache: +19 GB/device at llama-90b
+        decode_32k);
+      * partial prefill (serving engine): per-row dynamic update.
+    """
+    B, S_new = k_new.shape[:2]
+    S = cache_k.shape[1]
+    if S_new == S:
+        return k_new.astype(cache_k.dtype)
+    if S_new == 1:
+        idx = jax.lax.broadcasted_iota(jnp.int32, (B, S), 1)
+        mask = (idx == pos[:, None])[:, :, None, None]
+        return jnp.where(mask, k_new.astype(cache_k.dtype), cache_k)
+
+    def upd(c, kn, p):
+        return jax.lax.dynamic_update_slice(c, kn, (p, 0, 0))
+    return jax.vmap(upd)(cache_k, k_new, pos)
+
+
+# ---------------------------------------------------------------------------
+# Block apply
+# ---------------------------------------------------------------------------
+
+def attention(cfg, params, x, *, rules, positions, cache=None,
+              vision=None, cross: bool = False):
+    """Pre-norm'd x -> attention output (+ updated cache).
+
+    x: (B, S, D); positions: (B, S) absolute positions.
+    cache: dict from attn_cache_specs (decode/prefill) or None (train).
+    vision: (B, T_vis, D) projected patch embeddings (cross layers only).
+    """
+    dt = x.dtype
+    B, S, D = x.shape
+    x = rules.constrain(x, ("batch", None, None))
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    if cfg.qk_norm:
+        q = rmsnorm_nl(q, cfg.norm_eps) * params["q_norm"].astype(dt)
+
+    if cross:
+        assert vision is not None
+        if cache is not None and "ck" in cache and S == 1:
+            k, v = cache["ck"], cache["cv"]
+            new_cache = cache
+        else:
+            k = jnp.einsum("btd,dhk->bthk", vision, params["wk"].astype(dt))
+            v = jnp.einsum("btd,dhk->bthk", vision, params["wv"].astype(dt))
+            if cfg.qk_norm:
+                k = rmsnorm_nl(k, cfg.norm_eps) * params["k_norm"].astype(dt)
+            new_cache = dict(cache, ck=k, cv=v) if cache is not None else None
+        q = rules.constrain(q, ("batch", None, "heads", None))
+        k = rules.constrain(k, ("batch", None, "kv_heads", None))
+        v = rules.constrain(v, ("batch", None, "kv_heads", None))
+        out = attention_core(cfg, q, k, v, q_positions=positions,
+                             causal=False)
+        out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+        out = out * jnp.tanh(params["gate"].astype(jnp.float32)).astype(dt)
+        return out, new_cache
+
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if cfg.qk_norm:
+        k = rmsnorm_nl(k, cfg.norm_eps) * params["k_norm"].astype(dt)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    q = rules.constrain(q, ("batch", None, "heads", None))
+    k = rules.constrain(k, ("batch", None, "kv_heads", None))
+    v = rules.constrain(v, ("batch", None, "kv_heads", None))
+
+    new_cache = None
+    kv_valid_len = None
+    if cache is not None:
+        pos0 = positions[:, 0]
+        ck = _update_cache(cache["k"], k.astype(cache["k"].dtype), pos0)
+        cv = _update_cache(cache["v"], v.astype(cache["v"].dtype), pos0)
+        ck = rules.constrain(ck, ("batch", "kv_seq", "kv_heads", None))
+        cv = rules.constrain(cv, ("batch", "kv_seq", "kv_heads", None))
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck.astype(dt), cv.astype(dt)
+        kv_valid_len = positions[:, -1] + 1
+
+    out = attention_core(cfg, q, k, v, q_positions=positions,
+                         kv_valid_len=kv_valid_len, causal=True)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return out, new_cache

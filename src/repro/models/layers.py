@@ -1,0 +1,115 @@
+"""Common layers: RMSNorm, RoPE, embeddings, SwiGLU FFN (spec + apply)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_specs(dim: int) -> dict:
+    return {"scale": ParamSpec((dim,), (None,), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def rmsnorm_nl(x, eps: float = 1e-5):
+    """Un-learned rmsnorm (qk-norm without scale, MLA latent norm)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd) or (..., S, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv   # (..., S, hd/2)
+    if x.ndim == ang.ndim + 1:                        # has heads dim
+        ang = ang[..., None, :]                       # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_specs(vocab: int, d_model: int, tie: bool) -> dict:
+    s = {"tok": ParamSpec((vocab, d_model), ("vocab", "embed"), scale=0.02)}
+    if not tie:
+        s["unembed"] = ParamSpec((d_model, vocab), ("embed", "vocab"),
+                                 scale=0.02)
+    return s
+
+
+def embed(params, tokens, compute_dtype):
+    return params["tok"].astype(compute_dtype)[tokens]
+
+
+def unembed(params, x, tie: bool):
+    w = params["tok"].T if tie else params["unembed"]
+    return jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU dense FFN
+# ---------------------------------------------------------------------------
+
+def ffn_specs(d_model: int, d_ff: int) -> dict:
+    return {
+        "w_gate": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "w_up":   ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def ffn(params, x, rules):
+    """SwiGLU. x: (B, S, D) sequence-sharded on entry; gathered for the
+    matmuls (Megatron-SP style), reduce-scattered back by the output
+    constraint applied at the block level."""
+    dt = x.dtype
+    x = rules.constrain(x, ("batch", None, None))
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    h = rules.constrain(h, ("batch", None, "mlp"))
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(dt))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Modality frontend stub (VLM patches / audio frames)
+# ---------------------------------------------------------------------------
+
+def frontend_specs(raw_dim: int, d_model: int) -> dict:
+    return {"proj": ParamSpec((raw_dim, d_model), ("vis_dim", "embed"),
+                              scale=0.02)}
+
+
+def frontend(params, raw_embeds, compute_dtype):
+    """raw (B, T, raw_dim) precomputed patch/frame embeddings -> (B, T, D)."""
+    return jnp.einsum("btr,rd->btd", raw_embeds.astype(compute_dtype),
+                      params["proj"].astype(compute_dtype))

@@ -1,0 +1,149 @@
+"""Mamba (selective SSM) mixer — jamba-style interleaved layers.
+
+XLA path: projections + depthwise causal conv outside a lax.scan over time
+(the scan carries (B, d_inner, d_state) and is elementwise — the matmul
+FLOPs all live outside it). The Pallas kernel (kernels/mamba_scan) is the
+TPU perf path with chunked VMEM-resident state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+
+def _dims(cfg):
+    mb = cfg.mamba
+    d_inner = mb.expand * cfg.d_model
+    dt_rank = mb.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, dt_rank
+
+
+def mamba_specs(cfg) -> dict:
+    mb, d = cfg.mamba, cfg.d_model
+    di, dtr = _dims(cfg)
+    return {
+        "in_proj":  ParamSpec((d, 2 * di), ("embed", "mlp")),
+        "conv_w":   ParamSpec((mb.d_conv, di), ("conv", "mlp"), scale=0.1),
+        "conv_b":   ParamSpec((di,), ("mlp",), init="zeros"),
+        "x_proj":   ParamSpec((di, dtr + 2 * mb.d_state), ("mlp", None)),
+        "dt_proj":  ParamSpec((dtr, di), (None, "mlp"), scale=0.1),
+        "dt_bias":  ParamSpec((di,), ("mlp",), init="zeros"),
+        "a_log":    ParamSpec((di, mb.d_state), ("mlp", "state"), init="zeros"),
+        "d_skip":   ParamSpec((di,), ("mlp",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def mamba_cache_specs(cfg, batch: int):
+    mb = cfg.mamba
+    di, _ = _dims(cfg)
+    return {
+        "conv": ((batch, mb.d_conv - 1, di), ("batch", None, "mlp")),
+        "ssm":  ((batch, di, mb.d_state), ("batch", "mlp", "state")),
+    }
+
+
+def _causal_conv(params, x, conv_state):
+    """x: (B,S,di); depthwise causal conv via shifted slices."""
+    B, S, di = x.shape
+    dc = params["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((B, dc - 1, di), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                    # (B, S+dc-1, di)
+    w = params["conv_w"].astype(x.dtype)
+    y = sum(xp[:, j:j + S, :] * w[j] for j in range(dc))
+    y = y + params["conv_b"].astype(x.dtype)
+    new_state = xp[:, S:, :] if S >= dc - 1 else xp[:, -(dc - 1):, :]
+    return y, new_state
+
+
+def _ssm_scan(a_log, dt, b, c, xc, h0, chunk: int = 512):
+    """Selective scan. dt,xc: (B,S,di); b,c: (B,S,ds); h0: (B,di,ds) f32.
+    Returns y (B,S,di), hT.
+
+    Two-level scan with a CHECKPOINTED chunk body: backward saves only the
+    per-chunk boundary states ((S/chunk) x (B,di,ds)) and recomputes the
+    per-step residuals one chunk at a time — the flat scan's bwd holds
+    (S, B, di, ds) f32 (0.5 GB/layer x 7 live mamba layers per jamba unit
+    = the dominant train-time temp)."""
+    A = -jnp.exp(a_log.astype(jnp.float32))                   # (di, ds)
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp                             # (B,di),(B,ds)...
+        dt_f = dt_t.astype(jnp.float32)
+        dA = jnp.exp(dt_f[:, :, None] * A[None])              # (B,di,ds)
+        dBx = (dt_f * x_t.astype(jnp.float32))[:, :, None] \
+            * b_t.astype(jnp.float32)[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bds,bs->bd", h, c_t.astype(jnp.float32))
+        return h, y
+
+    B, S, di = dt.shape
+    xs = (dt.transpose(1, 0, 2), b.transpose(1, 0, 2),
+          c.transpose(1, 0, 2), xc.transpose(1, 0, 2))
+    if S % chunk != 0 or S <= chunk:
+        hT, ys = jax.lax.scan(step, h0, xs)
+        return ys.transpose(1, 0, 2).astype(xc.dtype), hT
+
+    n = S // chunk
+    xs_c = jax.tree.map(
+        lambda a: a.reshape(n, chunk, *a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def chunk_body(h, inp):
+        hT, ys = jax.lax.scan(step, h, inp)
+        return hT, ys
+
+    hT, ys = jax.lax.scan(chunk_body, h0, xs_c)
+    ys = ys.reshape(S, B, di)
+    return ys.transpose(1, 0, 2).astype(xc.dtype), hT
+
+
+def mamba(cfg, params, x, *, rules, cache=None, impl: str = "xla"):
+    """x: (B,S,D) -> (out, new_cache)."""
+    mb = cfg.mamba
+    dt_ = x.dtype
+    B, S, D = x.shape
+    di, dtr = _dims(cfg)
+    x = rules.constrain(x, ("batch", None, None))
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    xz = rules.constrain(xz, ("batch", None, "mlp"))
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(params, xi, conv_state)
+    xc = jax.nn.silu(xc)
+    xc = rules.constrain(xc, ("batch", None, "mlp"))
+
+    xdb = jnp.einsum("bse,ef->bsf", xc, params["x_proj"].astype(dt_))
+    dt_low = xdb[..., :dtr]
+    b_ssm = xdb[..., dtr:dtr + mb.d_state]
+    c_ssm = xdb[..., dtr + mb.d_state:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_low, params["dt_proj"].astype(dt_))
+        + params["dt_bias"].astype(dt_))
+    dt = rules.constrain(dt, ("batch", None, "mlp"))
+
+    h0 = (cache["ssm"].astype(jnp.float32) if cache is not None
+          else jnp.zeros((B, di, mb.d_state), jnp.float32))
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.mamba_scan import ops as ms_ops
+        y, hT = ms_ops.mamba_scan(params["a_log"], dt, b_ssm, c_ssm, xc, h0,
+                                  interpret=(impl == "pallas_interpret"))
+    else:
+        y, hT = _ssm_scan(params["a_log"], dt, b_ssm, c_ssm, xc, h0)
+    y = y + params["d_skip"].astype(dt_) * xc
+    y = y * jax.nn.silu(z)
+    y = rules.constrain(y, ("batch", None, "mlp"))
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": hT}
+    return out, new_cache

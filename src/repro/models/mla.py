@@ -1,0 +1,139 @@
+"""Multi-head latent attention (DeepSeek-V2).
+
+Two execution paths:
+  * expand   (train / prefill): decompress the latent into per-head K/V and
+    run standard MHA.
+  * absorbed (decode): fold W_k^b into the query and W_v^b into the output,
+    attending directly over the compressed latent cache — the MLA memory
+    saving (cache = kv_lora + rope_dim per token instead of 2*H*hd).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention_core
+from repro.models.layers import apply_rope, rmsnorm_nl
+from repro.models.params import ParamSpec
+
+NEG_INF = -1e30
+
+
+def mla_specs(cfg) -> dict:
+    m, d, H = cfg.mla, cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a":   ParamSpec((d, m.q_lora_rank), ("embed", "lora")),
+        "q_norm": ParamSpec((m.q_lora_rank,), (None,), init="ones"),
+        "wq_b":   ParamSpec((m.q_lora_rank, H, qk), ("lora", "heads", "head_dim")),
+        "wkv_a":  ParamSpec((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                            ("embed", "lora")),
+        "kv_norm": ParamSpec((m.kv_lora_rank,), (None,), init="ones"),
+        "wk_b":   ParamSpec((m.kv_lora_rank, H, m.qk_nope_head_dim),
+                            ("lora", "heads", "head_dim")),
+        "wv_b":   ParamSpec((m.kv_lora_rank, H, m.v_head_dim),
+                            ("lora", "heads", "head_dim")),
+        "wo":     ParamSpec((H, m.v_head_dim, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def mla_cache_specs(cfg, batch: int, max_len: int):
+    m = cfg.mla
+    return {
+        "ckv":   ((batch, max_len, m.kv_lora_rank), ("batch", "kv_seq", "lora")),
+        "krope": ((batch, max_len, m.qk_rope_head_dim),
+                  ("batch", "kv_seq", None)),
+    }
+
+
+def _update_cache_2d(cache, new, pos):
+    """Sharding-friendly (B, S, d) cache update (see attention._update_cache
+    for rationale)."""
+    B, S_new = new.shape[:2]
+    S = cache.shape[1]
+    if S_new == S:
+        return new.astype(cache.dtype)
+    if S_new == 1:
+        idx = jax.lax.broadcasted_iota(jnp.int32, (B, S), 1)
+        mask = (idx == pos[:, None])[:, :, None]
+        return jnp.where(mask, new.astype(cache.dtype), cache)
+
+    def upd(c, n, p):
+        return jax.lax.dynamic_update_slice(c, n, (p, 0))
+    return jax.vmap(upd)(cache, new.astype(cache.dtype), pos)
+
+
+def _latents(cfg, params, x, positions, dt):
+    m = cfg.mla
+    cq = jnp.einsum("bsd,dl->bsl", x, params["wq_a"].astype(dt))
+    cq = rmsnorm_nl(cq, cfg.norm_eps) * params["q_norm"].astype(dt)
+    q = jnp.einsum("bsl,lhk->bshk", cq, params["wq_b"].astype(dt))
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dl->bsl", x, params["wkv_a"].astype(dt))
+    ckv = rmsnorm_nl(kv[..., :m.kv_lora_rank], cfg.norm_eps) \
+        * params["kv_norm"].astype(dt)
+    krope = apply_rope(kv[..., m.kv_lora_rank:], positions, cfg.rope_theta)
+    return q_nope, q_rope, ckv, krope
+
+
+def mla_attention(cfg, params, x, *, rules, positions, cache=None):
+    """x: (B,S,D). Returns (out, new_cache)."""
+    dt = x.dtype
+    m = cfg.mla
+    B, S, D = x.shape
+    x = rules.constrain(x, ("batch", None, None))
+    q_nope, q_rope, ckv, krope = _latents(cfg, params, x, positions, dt)
+
+    new_cache = None
+    if cache is not None:
+        pos0 = positions[:, 0]
+        cckv = _update_cache_2d(cache["ckv"], ckv, pos0)
+        ckro = _update_cache_2d(cache["krope"], krope, pos0)
+        cckv = rules.constrain(cckv, ("batch", "kv_seq", None))
+        ckro = rules.constrain(ckro, ("batch", "kv_seq", None))
+        new_cache = {"ckv": cckv, "krope": ckro}
+        if S == 1:
+            out = _absorbed_decode(cfg, params, q_nope, q_rope, cckv, ckro,
+                                   positions, rules, dt)
+            return out, new_cache
+        ckv, krope = cckv.astype(dt), ckro.astype(dt)
+
+    # expand path --------------------------------------------------------
+    k_nope = jnp.einsum("bsl,lhk->bshk", ckv, params["wk_b"].astype(dt))
+    v = jnp.einsum("bsl,lhk->bshk", ckv, params["wv_b"].astype(dt))
+    H = cfg.num_heads
+    k_rope = jnp.broadcast_to(krope[:, :, None, :],
+                              (*krope.shape[:2], H, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    # pad v head_dim up to qk dim for the shared attention core, slice after
+    q = rules.constrain(q, ("batch", None, "heads", None))
+    k = rules.constrain(k, ("batch", None, "heads", None))
+    v = rules.constrain(v, ("batch", None, "heads", None))
+    kv_valid_len = positions[:, -1] + 1 if cache is not None else None
+    out = attention_core(cfg, q, k, v, q_positions=positions,
+                         kv_valid_len=kv_valid_len, causal=True)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return out, new_cache
+
+
+def _absorbed_decode(cfg, params, q_nope, q_rope, ckv, krope, positions,
+                     rules, dt):
+    """Decode without decompressing: score against the latent directly."""
+    m = cfg.mla
+    scale = 1.0 / ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** 0.5)
+    # fold W_k^b into q:  (B,1,H,nope) x (lora,H,nope) -> (B,1,H,lora)
+    q_abs = jnp.einsum("bqhn,lhn->bqhl", q_nope, params["wk_b"].astype(dt))
+    s_l = jnp.einsum("bqhl,bsl->bhqs", q_abs, ckv.astype(dt))
+    s_r = jnp.einsum("bqhr,bsr->bhqs", q_rope, krope.astype(dt))
+    scores = (s_l + s_r).astype(jnp.float32) * scale
+    kv_idx = jnp.arange(ckv.shape[1])
+    mask = kv_idx[None, :] <= positions[:, -1][:, None]      # (B, Skv)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(dt)
+    ctx = jnp.einsum("bhqs,bsl->bqhl", w, ckv.astype(dt))    # latent context
+    out = jnp.einsum("bqhl,lhk->bqhk", ctx, params["wv_b"].astype(dt))
+    out = jnp.einsum("bqhk,hkd->bqd", out, params["wo"].astype(dt))
+    return out

@@ -1,0 +1,164 @@
+"""Mixture-of-experts FFN: shared experts + routed top-k experts.
+
+Implementations (impl arg, chosen by caller):
+  * "dense"  — every expert computes every token; exact oracle for tests.
+  * "gshard" — group-wise capacity dispatch (GShard/MaxText "dropping"
+    style). Tokens are split into groups of <=4096; each group dispatches
+    into per-expert capacity slots via a (G, Tg, E, C) mask sharded
+    experts->model, so the per-device transient stays ~tens of MB. Expert
+    compute is local to the model shard; the combine einsum contracts the
+    expert axis and all-reduces over "model" — the EP collective of the
+    baseline. (The hillclimb alternative, core/ep_a2a.py, replaces this
+    with a shard_map all-to-all.)
+
+Aux (load-balance) loss is returned for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+GROUP_TOKENS = 4096
+
+
+def moe_specs(cfg) -> dict:
+    mo, d = cfg.moe, cfg.d_model
+    s = {
+        "router": ParamSpec((d, mo.num_experts), ("embed", "experts"),
+                            scale=0.02),
+        "w_gate": ParamSpec((mo.num_experts, d, mo.expert_ff),
+                            ("experts", "embed", "expert_mlp")),
+        "w_up":   ParamSpec((mo.num_experts, d, mo.expert_ff),
+                            ("experts", "embed", "expert_mlp")),
+        "w_down": ParamSpec((mo.num_experts, mo.expert_ff, d),
+                            ("experts", "expert_mlp", "embed")),
+    }
+    if mo.num_shared:
+        s["shared"] = {
+            "w_gate": ParamSpec((d, mo.shared_ff), ("embed", "mlp")),
+            "w_up":   ParamSpec((d, mo.shared_ff), ("embed", "mlp")),
+            "w_down": ParamSpec((mo.shared_ff, d), ("mlp", "embed")),
+        }
+    return s
+
+
+def _router(cfg, params, x):
+    """x: (G, Tg, D) -> (gates (G,Tg,K), sel (G,Tg,K), aux_loss)."""
+    mo = cfg.moe
+    logits = jnp.einsum("gtd,de->gte", x, params["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, sel = jax.lax.top_k(probs, mo.top_k)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss
+    me = probs.mean(axis=(0, 1))                              # (E,)
+    ce = jnp.mean(jax.nn.one_hot(sel, mo.num_experts,
+                                 dtype=jnp.float32), axis=(0, 1, 2))
+    aux = mo.router_aux_coef * mo.num_experts * jnp.sum(me * ce) * mo.top_k
+    return gates, sel, aux
+
+
+def _expert_ffn(params, h, dt):
+    """h: (G, E, C, D) per-expert token slabs -> (G, E, C, D)."""
+    g = jnp.einsum("gecd,edf->gecf", h, params["w_gate"].astype(dt))
+    u = jnp.einsum("gecd,edf->gecf", h, params["w_up"].astype(dt))
+    a = jax.nn.silu(g) * u
+    return jnp.einsum("gecf,efd->gecd", a, params["w_down"].astype(dt))
+
+
+def _capacity(cfg, tg: int) -> int:
+    mo = cfg.moe
+    c = int(mo.top_k * tg / mo.num_experts * mo.capacity_factor)
+    return max(-(-c // 4) * 4, 4)
+
+
+def moe_gshard(cfg, params, x, rules):
+    """x: (B,S,D) -> (out, aux)."""
+    mo = cfg.moe
+    dt = x.dtype
+    B, S, D = x.shape
+    x = rules.constrain(x, ("batch", None, None))
+    tg = min(S, GROUP_TOKENS)
+    G = B * S // tg
+    xg = x.reshape(G, tg, D)
+    xg = rules.constrain(xg, ("batch", None, None))
+
+    gates, sel, aux = _router(cfg, params, xg)
+    E, K = mo.num_experts, mo.top_k
+    C = _capacity(cfg, tg)
+
+    # Position of each (token, k) in its expert's queue, counted per group.
+    oh = jax.nn.one_hot(sel, E, dtype=jnp.float32)            # (G,Tg,K,E)
+    oh = rules.constrain(oh, ("batch", None, None, "experts"))
+    # flatten (Tg,K) in token-major order so earlier tokens win slots
+    ohf = oh.reshape(G, tg * K, E)
+    pos = jnp.cumsum(ohf, axis=1) * ohf - 1.0                 # (G,Tg*K,E)
+    pos = pos.max(axis=-1).reshape(G, tg, K)                  # slot per (t,k)
+    keep = (pos >= 0) & (pos < C)
+    pos = jnp.clip(pos, 0, C - 1).astype(jnp.int32)
+
+    gates_f = gates * keep                                     # drop overflow
+    # dispatch/combine mask built per-k to bound the transient:
+    # (G, Tg, E, C) accumulated over K, sharded experts->model.
+    def add_k(carry, k_idx):
+        m = (jax.nn.one_hot(sel[:, :, k_idx], E, dtype=jnp.float32)
+             [..., None]
+             * jax.nn.one_hot(pos[:, :, k_idx], C, dtype=jnp.float32)
+             [:, :, None, :])
+        m = m * gates_f[:, :, k_idx][..., None, None]
+        return carry + rules.constrain(m, ("batch", None, "experts", None)), None
+
+    combine = jnp.zeros((G, tg, E, C), dtype=jnp.float32)
+    combine = rules.constrain(combine, ("batch", None, "experts", None))
+    for k_idx in range(K):
+        combine, _ = add_k(combine, k_idx)
+    dispatch = (combine > 0).astype(dt)
+
+    h = jnp.einsum("gtec,gtd->gecd", dispatch, xg)            # local dispatch
+    h = rules.constrain(h, ("batch", "experts", None, None))
+    y = _expert_ffn(params, h, dt)
+    y = rules.constrain(y, ("batch", "experts", None, None))
+    # combine: contracts experts (model-sharded) -> all-reduce over model
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(dt), y)
+    out = rules.constrain(out, ("batch", None, None))
+    out = out.reshape(B, S, D)
+
+    if mo.num_shared:
+        out = out + _shared(params, x, dt, rules)
+    return out, aux.astype(jnp.float32)
+
+
+def moe_dense(cfg, params, x, rules):
+    """Oracle: run all experts on all tokens, weight by gates."""
+    mo = cfg.moe
+    dt = x.dtype
+    B, S, D = x.shape
+    xg = x.reshape(1, B * S, D)
+    gates, sel, aux = _router(cfg, params, xg)
+    h = jnp.broadcast_to(xg[0][None], (mo.num_experts, B * S, D))[None]
+    h = h.transpose(0, 1, 2, 3)                               # (1,E,T,D)
+    y = _expert_ffn(params, h, dt)                            # (1,E,T,D)
+    w = jnp.sum(jax.nn.one_hot(sel, mo.num_experts, dtype=jnp.float32)
+                * gates[..., None], axis=2)                   # (1,T,E)
+    out = jnp.einsum("gte,getd->gtd", w.astype(dt), y).reshape(B, S, D)
+    if mo.num_shared:
+        out = out + _shared(params, x, dt, rules)
+    return out, aux.astype(jnp.float32)
+
+
+def _shared(params, x, dt, rules):
+    p = params["shared"]
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    h = rules.constrain(jax.nn.silu(g) * u, ("batch", None, "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+
+
+def moe(cfg, params, x, rules, impl: str = "gshard"):
+    if impl == "dense":
+        return moe_dense(cfg, params, x, rules)
+    if impl == "a2a":
+        from repro.core.ep_a2a import moe_a2a
+        return moe_a2a(cfg, params, x, rules)
+    return moe_gshard(cfg, params, x, rules)

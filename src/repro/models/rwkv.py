@@ -1,0 +1,164 @@
+"""RWKV6 (Finch) mixer: time-mix with data-dependent per-channel decay +
+channel-mix FFN. Attention-free; state is O(1) in sequence length.
+
+XLA path: projections outside a lax.scan carrying the (B,H,hd,hd) WKV
+state. Pallas kernel (kernels/rwkv6) is the TPU perf path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+DECAY_LORA = 64
+
+
+def timemix_specs(cfg) -> dict:
+    d = cfg.d_model
+    return {
+        "mix_r": ParamSpec((d,), (None,), init="ones", scale=None),
+        "mix_k": ParamSpec((d,), (None,), init="ones"),
+        "mix_v": ParamSpec((d,), (None,), init="ones"),
+        "mix_w": ParamSpec((d,), (None,), init="ones"),
+        "mix_g": ParamSpec((d,), (None,), init="ones"),
+        "wr": ParamSpec((d, d), ("embed", "mlp")),
+        "wk": ParamSpec((d, d), ("embed", "mlp")),
+        "wv": ParamSpec((d, d), ("embed", "mlp")),
+        "wg": ParamSpec((d, d), ("embed", "mlp")),
+        "wo": ParamSpec((d, d), ("mlp", "embed")),
+        "w0": ParamSpec((d,), (None,), init="zeros"),
+        "w_a": ParamSpec((d, DECAY_LORA), ("embed", None), scale=0.02),
+        "w_b": ParamSpec((DECAY_LORA, d), (None, "embed"), scale=0.02),
+        "bonus": ParamSpec((d,), (None,), init="zeros"),
+        "ln_x": ParamSpec((d,), (None,), init="ones"),
+    }
+
+
+def channelmix_specs(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mix_k": ParamSpec((d,), (None,), init="ones"),
+        "mix_r": ParamSpec((d,), (None,), init="ones"),
+        "wk": ParamSpec((d, f), ("embed", "mlp")),
+        "wv": ParamSpec((f, d), ("mlp", "embed")),
+        "wr": ParamSpec((d, d), ("embed", "mlp")),
+    }
+
+
+def rwkv_cache_specs(cfg, batch: int):
+    d = cfg.d_model
+    H = d // cfg.rwkv.head_size
+    hd = cfg.rwkv.head_size
+    return {
+        "shift_t": ((batch, d), ("batch", None)),
+        "shift_c": ((batch, d), ("batch", None)),
+        "wkv": ((batch, H, hd, hd), ("batch", "rwkv_head", None, None)),
+    }
+
+
+def _token_shift(x, prev):
+    """x: (B,S,D); prev: (B,D) last token of the previous segment."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _wkv_scan(r, k, v, logw, u, s0):
+    """r,k,v,logw: (B,S,H,hd); u: (H,hd); s0: (B,H,hd,hd) f32.
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, lw_t = [a.astype(jnp.float32) for a in inp]
+        w_t = jnp.exp(lw_t)                                   # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]            # (B,H,hd,hd)
+        y = jnp.einsum("bhc,bhcv->bhv", r_t,
+                       s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, logw))
+    sT, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), sT                       # (B,S,H,hd) f32
+
+
+def time_mix(cfg, params, x, *, rules, cache=None, impl: str = "xla"):
+    dt_ = x.dtype
+    B, S, D = x.shape
+    H = D // cfg.rwkv.head_size
+    hd = cfg.rwkv.head_size
+    prev = (cache["shift_t"].astype(dt_) if cache is not None
+            else jnp.zeros((B, D), dt_))
+    xs = _token_shift(x, prev)
+
+    def lerp(mix):
+        m = params[mix].astype(dt_)
+        return x * m + xs * (1.0 - m)
+
+    r = jnp.einsum("bsd,de->bse", lerp("mix_r"), params["wr"].astype(dt_))
+    k = jnp.einsum("bsd,de->bse", lerp("mix_k"), params["wk"].astype(dt_))
+    v = jnp.einsum("bsd,de->bse", lerp("mix_v"), params["wv"].astype(dt_))
+    g = jnp.einsum("bsd,de->bse", lerp("mix_g"), params["wg"].astype(dt_))
+    # data-dependent decay (the Finch contribution)
+    wl = jnp.einsum("bsd,dr->bsr", jnp.tanh(lerp("mix_w")),
+                    params["w_a"].astype(dt_))
+    w_raw = params["w0"].astype(jnp.float32) \
+        + jnp.einsum("bsr,rd->bsd", wl, params["w_b"].astype(dt_)) \
+        .astype(jnp.float32)
+    logw = -jnp.exp(w_raw - 0.5)                              # log w_t < 0
+
+    def heads(a):
+        return a.reshape(B, S, H, hd)
+
+    r_h, k_h, v_h = heads(r), heads(k), heads(v)
+    logw_h = heads(logw)
+    u = params["bonus"].astype(jnp.float32).reshape(H, hd)
+    s0 = (cache["wkv"].astype(jnp.float32) if cache is not None
+          else jnp.zeros((B, H, hd, hd), jnp.float32))
+    r_h = rules.constrain(r_h, ("batch", None, "rwkv_head", None))
+    k_h = rules.constrain(k_h, ("batch", None, "rwkv_head", None))
+    v_h = rules.constrain(v_h, ("batch", None, "rwkv_head", None))
+    logw_h = rules.constrain(logw_h, ("batch", None, "rwkv_head", None))
+
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.rwkv6 import ops as rw_ops
+        y, sT = rw_ops.wkv6(r_h, k_h, v_h, logw_h, u, s0,
+                            interpret=(impl == "pallas_interpret"))
+    else:
+        y, sT = _wkv_scan(r_h, k_h, v_h, logw_h, u, s0)
+
+    # per-head groupnorm
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(B, S, D).astype(dt_) * params["ln_x"].astype(dt_)
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("bse,ed->bsd", y, params["wo"].astype(dt_))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache, shift_t=x[:, -1, :].astype(cache["shift_t"].dtype),
+                         wkv=sT)
+    return out, new_cache
+
+
+def channel_mix(cfg, params, x, *, rules, cache=None):
+    dt_ = x.dtype
+    B, S, D = x.shape
+    prev = (cache["shift_c"].astype(dt_) if cache is not None
+            else jnp.zeros((B, D), dt_))
+    xs = _token_shift(x, prev)
+
+    def lerp(mix):
+        m = params[mix].astype(dt_)
+        return x * m + xs * (1.0 - m)
+
+    k = jnp.einsum("bsd,df->bsf", lerp("mix_k"), params["wk"].astype(dt_))
+    k = rules.constrain(k, ("batch", None, "mlp"))
+    kv = jnp.einsum("bsf,fd->bsd", jnp.square(jax.nn.relu(k)),
+                    params["wv"].astype(dt_))
+    r = jnp.einsum("bsd,de->bse", lerp("mix_r"), params["wr"].astype(dt_))
+    out = jax.nn.sigmoid(r) * kv
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache,
+                         shift_c=x[:, -1, :].astype(cache["shift_c"].dtype))
+    return out, new_cache

@@ -1,0 +1,13 @@
+from repro.optim.optimizers import (
+    OptState,
+    adamw_init_specs,
+    adafactor_init_specs,
+    opt_init_specs,
+    opt_update,
+)
+from repro.optim.schedule import cosine_schedule
+from repro.optim.compression import compress_grad, decompress_grad
+
+__all__ = ["OptState", "adamw_init_specs", "adafactor_init_specs",
+           "opt_init_specs", "opt_update", "cosine_schedule",
+           "compress_grad", "decompress_grad"]

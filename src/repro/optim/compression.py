@@ -1,0 +1,41 @@
+"""Gradient compression for the DP/pod all-reduce, with error feedback.
+
+int8 per-tensor-block quantization: g -> (int8 codes, f32 scale per block).
+Used by the ST-overlapped gradient reduction (core/overlap.py): compressing
+before the inter-pod all-reduce cuts collective bytes 4x (f32) / 2x (bf16);
+error feedback keeps the optimization unbiased in expectation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 1024
+
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % BLOCK
+    return jnp.pad(x.reshape(-1), (0, pad)), n
+
+
+def compress_grad(g, error=None):
+    """g: any-shape float array -> (codes int8, scales f32, new_error)."""
+    gf = g.astype(jnp.float32)
+    if error is not None:
+        gf = gf + error
+    flat, n = _pad_to_block(gf)
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    codes = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    recon = (codes.astype(jnp.float32) * scale).reshape(-1)[:n].reshape(g.shape)
+    new_error = gf - recon
+    return codes, scale[:, 0], new_error
+
+
+def decompress_grad(codes, scales, shape):
+    flat = (codes.astype(jnp.float32) * scales[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)

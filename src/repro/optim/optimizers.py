@@ -1,0 +1,166 @@
+"""Sharded optimizers: AdamW and Adafactor(-style factored second moment).
+
+Optimizer state is described with the same ParamSpec machinery as model
+params, so the dry-run can lower full-scale train steps without allocating,
+and states inherit the params' logical sharding (ZeRO: states shard exactly
+like params — over both "data" (FSDP) and "model" (TP) axes).
+
+Memory policy knobs (per arch config):
+  * opt_state_dtype: f32 | bf16 moments
+  * optimizer: "adamw" | "adafactor" (factored second moment: rank-1
+    row/col statistics — O(n/k) memory for the v term)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec, is_spec
+
+OptState = dict
+
+
+def _moment_spec(spec: ParamSpec, dtype) -> ParamSpec:
+    return dataclasses.replace(spec, init="zeros", dtype=dtype)
+
+
+def adamw_init_specs(param_specs, dtype=jnp.float32) -> OptState:
+    return {
+        "mu": jax.tree.map(lambda s: _moment_spec(s, dtype), param_specs,
+                           is_leaf=is_spec),
+        "nu": jax.tree.map(lambda s: _moment_spec(s, dtype), param_specs,
+                           is_leaf=is_spec),
+        "count": ParamSpec((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+def _factored_axes(shape):
+    """Factor over the two largest dims if rank>=2 and big enough."""
+    if len(shape) < 2 or min(shape[-2:]) < 2:
+        return None
+    return (len(shape) - 2, len(shape) - 1)
+
+
+def adafactor_init_specs(param_specs, dtype=jnp.float32) -> OptState:
+    def vrow(s: ParamSpec):
+        f = _factored_axes(s.shape)
+        if f is None:
+            return _moment_spec(s, dtype)
+        shape = tuple(d for i, d in enumerate(s.shape) if i != f[1])
+        axes = tuple(a for i, a in enumerate(s.axes) if i != f[1])
+        return ParamSpec(shape, axes, init="zeros", dtype=dtype)
+
+    def vcol(s: ParamSpec):
+        f = _factored_axes(s.shape)
+        if f is None:
+            return ParamSpec((1,), (None,), init="zeros", dtype=dtype)
+        shape = tuple(d for i, d in enumerate(s.shape) if i != f[0])
+        axes = tuple(a for i, a in enumerate(s.axes) if i != f[0])
+        return ParamSpec(shape, axes, init="zeros", dtype=dtype)
+
+    return {
+        "mu": jax.tree.map(lambda s: _moment_spec(s, dtype), param_specs,
+                           is_leaf=is_spec),
+        "vr": jax.tree.map(vrow, param_specs, is_leaf=is_spec),
+        "vc": jax.tree.map(vcol, param_specs, is_leaf=is_spec),
+        "count": ParamSpec((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+def opt_init_specs(cfg, param_specs) -> OptState:
+    dtype = jnp.dtype(cfg.opt_state_dtype)
+    if cfg.optimizer == "adafactor":
+        return adafactor_init_specs(param_specs, dtype)
+    return adamw_init_specs(param_specs, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Updates
+# ---------------------------------------------------------------------------
+
+def _adamw_update(p, g, mu, nu, lr, b1, b2, eps, wd, step):
+    g = g.astype(jnp.float32)
+    mu_f = mu.astype(jnp.float32) * b1 + (1 - b1) * g
+    nu_f = nu.astype(jnp.float32) * b2 + (1 - b2) * g * g
+    mu_hat = mu_f / (1 - b1 ** step)
+    nu_hat = nu_f / (1 - b2 ** step)
+    upd = mu_hat / (jnp.sqrt(nu_hat) + eps) + wd * p.astype(jnp.float32)
+    new_p = p.astype(jnp.float32) - lr * upd
+    return (new_p.astype(p.dtype), mu_f.astype(mu.dtype),
+            nu_f.astype(nu.dtype))
+
+
+def _adafactor_update(p, g, mu, vr, vc, lr, b1, b2, eps, wd, step):
+    g = g.astype(jnp.float32)
+    f = _factored_axes(p.shape)
+    g2 = g * g + eps
+    if f is None:
+        vr_f = vr.astype(jnp.float32) * b2 + (1 - b2) * g2
+        precond = jax.lax.rsqrt(vr_f / (1 - b2 ** step))
+        vc_f = vc.astype(jnp.float32)
+    else:
+        r = g2.mean(axis=f[1])
+        c = g2.mean(axis=f[0])
+        vr_f = vr.astype(jnp.float32) * b2 + (1 - b2) * r
+        vc_f = vc.astype(jnp.float32) * b2 + (1 - b2) * c
+        rh = vr_f / (1 - b2 ** step)
+        ch = vc_f / (1 - b2 ** step)
+        denom = rh.mean(axis=-1, keepdims=True)
+        vhat = (jnp.expand_dims(rh, f[1]) * jnp.expand_dims(ch, f[0])
+                / jnp.expand_dims(denom, f[1]))
+        precond = jax.lax.rsqrt(vhat)
+    u = g * precond
+    # update clipping (Adafactor RMS clip)
+    rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+    u = u / jnp.maximum(1.0, rms)
+    mu_f = mu.astype(jnp.float32) * b1 + (1 - b1) * u
+    new_p = p.astype(jnp.float32) - lr * (mu_f + wd * p.astype(jnp.float32))
+    return (new_p.astype(p.dtype), mu_f.astype(mu.dtype),
+            vr_f.astype(vr.dtype), vc_f.astype(vc.dtype))
+
+
+def opt_update(cfg, params, grads, state: OptState, lr,
+               b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    """Returns (new_params, new_state). Global-norm clip at 1.0."""
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)) + 1e-30)
+    scale = jnp.minimum(1.0, 1.0 / gnorm)
+    grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+    step = state["count"] + 1
+    stepf = step.astype(jnp.float32)
+
+    if cfg.optimizer == "adafactor":
+        out = jax.tree.map(
+            lambda p, g, mu, vr, vc: _adafactor_update(
+                p, g, mu, vr, vc, lr, b1, b2, eps, wd, stepf),
+            params, grads, state["mu"], state["vr"], state["vc"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {
+            "mu": jax.tree.map(lambda t: t[1], out,
+                               is_leaf=lambda x: isinstance(x, tuple)),
+            "vr": jax.tree.map(lambda t: t[2], out,
+                               is_leaf=lambda x: isinstance(x, tuple)),
+            "vc": jax.tree.map(lambda t: t[3], out,
+                               is_leaf=lambda x: isinstance(x, tuple)),
+            "count": step,
+        }
+        return new_params, new_state
+
+    out = jax.tree.map(
+        lambda p, g, mu, nu: _adamw_update(p, g, mu, nu, lr, b1, b2, eps,
+                                           wd, stepf),
+        params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {
+        "mu": jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple)),
+        "nu": jax.tree.map(lambda t: t[2], out,
+                           is_leaf=lambda x: isinstance(x, tuple)),
+        "count": step,
+    }
+    return new_params, new_state

@@ -1,0 +1,14 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr=3e-4, warmup=2000, total=100_000,
+                    min_frac=0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * jnp.minimum(s, warmup) / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (min_frac + (1 - min_frac) * 0.5
+                     * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)

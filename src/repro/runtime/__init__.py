@@ -1,0 +1,7 @@
+from repro.runtime.ft import (
+    StragglerDetector,
+    HeartbeatMonitor,
+    TrainingRuntime,
+)
+
+__all__ = ["StragglerDetector", "HeartbeatMonitor", "TrainingRuntime"]

@@ -1,0 +1,144 @@
+"""Batched prefill/decode serving engine.
+
+Static-batch continuous serving: requests queue up, the engine fills a
+fixed batch of decode slots; a slot is recycled as soon as its sequence
+finishes (EOS or max tokens). Prefill and decode run as separately jitted
+steps (prefill writes the slot's KV range; decode appends one token for
+every active slot per step). Per-slot positions support ragged sequence
+lengths inside one batch.
+
+This is deliberately the same step functions the dry-run lowers — the
+engine is a host-side scheduler around them.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import cache_specs, init_params
+from repro.models.params import is_spec
+from repro.train.steps import make_decode_step, make_prefill_step
+
+_req_ids = itertools.count()
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray                  # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1                    # -1: never stop early
+    req_id: int = field(default_factory=lambda: next(_req_ids))
+    out_tokens: List[int] = field(default_factory=list)
+    submitted_at: float = field(default_factory=time.monotonic)
+    done_at: Optional[float] = None
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, rules, *, batch_slots: int = 4,
+                 max_len: int = 256, moe_impl: str = "dense"):
+        self.cfg = cfg
+        self.params = params
+        self.rules = rules
+        self.B = batch_slots
+        self.max_len = max_len
+        self._prefill_one = jax.jit(
+            make_prefill_step(cfg, rules, max_len=max_len, moe_impl=moe_impl))
+        self._decode = jax.jit(
+            make_decode_step(cfg, rules, moe_impl=moe_impl),
+            donate_argnums=(2,))
+        cspecs = cache_specs(cfg, batch_slots, max_len)
+        self.cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), cspecs, is_leaf=is_spec)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.slot_pos = np.zeros(batch_slots, np.int32)
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _free_slots(self):
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self):
+        """Prefill queued requests into free slots (one at a time: each
+        prefill writes one slot's KV range via the batched prefill step)."""
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            L = len(req.prompt)
+            toks = np.zeros((self.B, L), np.int32)
+            toks[slot] = req.prompt
+            batch = {"tokens": jnp.asarray(toks),
+                     "positions": jnp.broadcast_to(
+                         jnp.arange(L, dtype=jnp.int32), (self.B, L))}
+            if self.cfg.family == "vlm":
+                batch["vision"] = jnp.zeros(
+                    (self.B, self.cfg.vision.num_tokens,
+                     self.cfg.vision.raw_dim), jnp.float32)
+            logits, new_cache = self._prefill_one(self.params, batch)
+            # merge ONLY this slot's cache rows (other slots keep theirs).
+            # prefix-layer leaves are (B, ...); scanned-unit leaves carry a
+            # leading layer axis (L, B, ...), so batch is dim 1 there.
+            self.cache = {
+                "prefix": jax.tree.map(
+                    lambda old, new: old.at[slot].set(new[slot]),
+                    self.cache["prefix"], new_cache["prefix"]),
+                "unit": jax.tree.map(
+                    lambda old, new: old.at[:, slot].set(new[:, slot]),
+                    self.cache["unit"], new_cache["unit"]),
+            }
+            nxt = int(np.argmax(np.asarray(logits)[slot, -1]))
+            req.out_tokens.append(nxt)
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = L
+
+    # -- decode loop ----------------------------------------------------------
+    def _active(self):
+        return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    def step(self):
+        """One engine step: admit, batched decode, recycle finished slots."""
+        self._admit()
+        active = self._active()
+        if not active:
+            return 0
+        toks = np.zeros((self.B, 1), np.int32)
+        for i in active:
+            toks[i, 0] = self.slot_req[i].out_tokens[-1]
+        batch = {"tokens": jnp.asarray(toks),
+                 "positions": jnp.asarray(self.slot_pos[:, None])}
+        if self.cfg.family == "vlm":
+            batch["vision"] = jnp.zeros(
+                (self.B, self.cfg.vision.num_tokens,
+                 self.cfg.vision.raw_dim), jnp.float32)
+        logits, self.cache = self._decode(self.params, batch, self.cache)
+        lg = np.asarray(logits)[:, 0, :self.cfg.vocab_size]
+        for i in active:
+            req = self.slot_req[i]
+            nxt = int(np.argmax(lg[i]))
+            req.out_tokens.append(nxt)
+            self.slot_pos[i] += 1
+            done = (len(req.out_tokens) >= req.max_new_tokens
+                    or nxt == req.eos_id
+                    or self.slot_pos[i] >= self.max_len - 1)
+            if done:
+                req.done_at = time.monotonic()
+                self.completed.append(req)
+                self.slot_req[i] = None
+        return len(active)
+
+    def run_until_drained(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or self._active()) and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

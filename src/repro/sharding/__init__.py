@@ -1,0 +1,10 @@
+from repro.sharding.rules import (
+    ShardingRules,
+    DEFAULT_RULES,
+    logical_to_pspec,
+    pspec_tree,
+    constrain,
+)
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "logical_to_pspec",
+           "pspec_tree", "constrain"]

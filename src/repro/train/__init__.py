@@ -1,0 +1,9 @@
+from repro.train.steps import (
+    make_train_step,
+    make_prefill_step,
+    make_decode_step,
+    init_cache_in_jit,
+)
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "init_cache_in_jit"]

@@ -1,0 +1,148 @@
+"""Step builders: train (grad-accum microbatching, ZeRO-sharded optimizer),
+prefill, decode. All steps are pure functions suitable for jax.jit with
+in/out shardings derived from the ParamSpec trees.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import (cache_specs, forward, lm_loss, logits_from_hidden,
+                          model_specs)
+from repro.models.model import cast_big_params, lm_loss_fused
+from repro.models.params import is_spec, param_pspecs
+from repro.optim import cosine_schedule, opt_update
+
+
+def _loss_fn(cfg, rules, moe_impl, unroll, params, mbatch):
+    params = cast_big_params(cfg, params, rules)
+    x, _, aux = forward(cfg, params, mbatch, rules=rules, moe_impl=moe_impl,
+                        unroll=unroll)
+    loss = lm_loss_fused(cfg, params, x, mbatch["targets"], rules)
+    return loss + aux, (loss, aux)
+
+
+def effective_accum(cfg, rules, global_batch=None) -> int:
+    """Clamp grad_accum so each microbatch still covers every batch shard
+    (a microbatch smaller than the batch-sharding degree idles devices and
+    cannot even be sharded as a pjit argument)."""
+    accum = max(cfg.grad_accum, 1)
+    if not global_batch or rules.mesh is None:
+        return accum
+    ba = rules.map.get("batch")
+    if not ba:
+        return accum
+    shard = 1
+    for a in (ba if isinstance(ba, tuple) else (ba,)):
+        shard *= rules.mesh.shape[a]
+    accum = min(accum, max(1, global_batch // shard))
+    while accum > 1 and (global_batch % accum
+                         or (global_batch // accum) % shard):
+        accum -= 1
+    return accum
+
+
+def make_train_step(cfg, rules, moe_impl: str = "gshard",
+                    schedule=cosine_schedule, unroll: bool = False,
+                    global_batch=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    batch leaves have global-batch leading dim; grad accumulation reshapes to
+    (accum, micro, ...) and scans, accumulating grads in opt_state_dtype
+    (bf16 for the very large archs — the f32 master params absorb rounding).
+    """
+    specs = model_specs(cfg)
+    pspecs = param_pspecs(specs, rules)
+    accum = effective_accum(cfg, rules, global_batch)
+    acc_dtype = (jnp.bfloat16 if jnp.dtype(cfg.opt_state_dtype) == jnp.bfloat16
+                 else jnp.float32)
+    loss_fn = functools.partial(_loss_fn, cfg, rules, moe_impl, unroll)
+
+    def constrain_grads(g):
+        if rules.mesh is None:
+            return g
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, jax.sharding.NamedSharding(rules.mesh, s)),
+            g, pspecs)
+
+    def train_step(params, opt_state, batch):
+        step = opt_state["count"]
+        if accum == 1:
+            (tot, (loss, aux)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads = constrain_grads(grads)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                batch)
+            gzero = constrain_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params))
+
+            def micro(carry, m):
+                gsum, lsum, asum = carry
+                (tot, (loss, aux)), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, m)
+                gsum = constrain_grads(jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), gsum, g))
+                return (gsum, lsum + loss, asum + aux), None
+
+            (gsum, lsum, asum), _ = jax.lax.scan(
+                micro, (gzero, jnp.zeros((), jnp.float32),
+                        jnp.zeros((), jnp.float32)),
+                mb)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss, aux = lsum / accum, asum / accum
+
+        lr = schedule(step)
+        new_params, new_opt = opt_update(cfg, params, grads, opt_state, lr)
+        metrics = {"loss": loss, "aux_loss": aux, "lr": lr,
+                   "step": new_opt["count"]}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_cache_in_jit(cfg, batch: int, max_len: int, rules,
+                      cache_dtype=jnp.bfloat16):
+    """Create a zeroed, sharding-constrained cache inside a jitted fn."""
+    cspecs = cache_specs(cfg, batch, max_len, cache_dtype)
+
+    def mk(s):
+        z = jnp.zeros(s.shape, s.dtype)
+        return rules.constrain(z, s.axes)
+
+    return jax.tree.map(mk, cspecs, is_leaf=is_spec)
+
+
+def make_prefill_step(cfg, rules, max_len: Optional[int] = None,
+                      moe_impl: str = "gshard", unroll: bool = False):
+    """prefill_step(params, batch) -> (last_logits, cache)."""
+
+    def prefill_step(params, batch):
+        B, S = batch["positions"].shape
+        cache = init_cache_in_jit(cfg, B, max_len or S, rules)
+        x, new_cache, _ = forward(cfg, params, batch, rules=rules,
+                                  cache=cache, moe_impl=moe_impl,
+                                  unroll=unroll)
+        logits = logits_from_hidden(cfg, params, x, rules, last_only=True)
+        return logits, new_cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg, rules, moe_impl: str = "gshard",
+                     unroll: bool = False):
+    """decode_step(params, batch, cache) -> (logits (B,1,V), new_cache)."""
+
+    def decode_step(params, batch, cache):
+        x, new_cache, _ = forward(cfg, params, batch, rules=rules,
+                                  cache=cache, moe_impl=moe_impl,
+                                  unroll=unroll)
+        logits = logits_from_hidden(cfg, params, x, rules, last_only=True)
+        return logits, new_cache
+
+    return decode_step

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run is the ONLY place that forces 512
+# placeholder devices); multi-device ST tests spawn subprocesses.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)

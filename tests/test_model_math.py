@@ -1,0 +1,178 @@
+"""Model-math invariants: MLA absorbed==expanded, MoE gshard==dense oracle,
+fused loss==unfused, rope properties, sharding-rule logic."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import SHAPES, get_config
+from repro.models import (forward, init_params, lm_loss, logits_from_hidden,
+                          model_specs, cache_specs)
+from repro.models.layers import apply_rope
+from repro.models.model import lm_loss_fused
+from repro.models.moe import moe_dense, moe_gshard, moe_specs
+from repro.sharding.rules import make_rules
+
+
+def test_mla_absorbed_decode_matches_expand():
+    """Decode via the absorbed (latent) path == full expand path."""
+    cfg = get_config("deepseek-v2-236b").reduced()
+    rules = make_rules(cfg, None, None)
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    B, S = 2, 12
+    toks = jnp.asarray(np.random.RandomState(0).randint(0, cfg.vocab_size,
+                                                        (B, S + 1)))
+    # path A: prefill 0..S then decode token S via absorbed attention
+    cache = init_params(cache_specs(cfg, B, S + 1), jax.random.PRNGKey(1),
+                        dtype=None)
+    pre = {"tokens": toks[:, :S],
+           "positions": jnp.broadcast_to(jnp.arange(S), (B, S))}
+    _, cache, _ = forward(cfg, params, pre, rules=rules, cache=cache,
+                          moe_impl="dense")
+    dec = {"tokens": toks[:, S:S + 1],
+           "positions": jnp.full((B, 1), S, jnp.int32)}
+    xd, _, _ = forward(cfg, params, dec, rules=rules, cache=cache,
+                       moe_impl="dense")
+    la = logits_from_hidden(cfg, params, xd, rules, last_only=True)
+    # path B: full forward over S+1 tokens (expand path), take last position
+    full = {"tokens": toks,
+            "positions": jnp.broadcast_to(jnp.arange(S + 1), (B, S + 1))}
+    xf, _, _ = forward(cfg, params, full, rules=rules, moe_impl="dense")
+    lb = logits_from_hidden(cfg, params, xf, rules)[:, -1:, :]
+    np.testing.assert_allclose(np.asarray(la, np.float32),
+                               np.asarray(lb, np.float32), atol=3e-2)
+
+
+def test_decode_matches_full_forward_dense():
+    """Generic cache correctness: step-by-step decode == full forward."""
+    cfg = get_config("granite-3-2b").reduced()
+    rules = make_rules(cfg, None, None)
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    B, S = 2, 8
+    toks = jnp.asarray(np.random.RandomState(1).randint(
+        0, cfg.vocab_size, (B, S)))
+    full = {"tokens": toks,
+            "positions": jnp.broadcast_to(jnp.arange(S), (B, S))}
+    xf, _, _ = forward(cfg, params, full, rules=rules, moe_impl="dense")
+    lf = logits_from_hidden(cfg, params, xf, rules)
+
+    cache = init_params(cache_specs(cfg, B, S), jax.random.PRNGKey(1),
+                        dtype=None)
+    logits_steps = []
+    for t in range(S):
+        b = {"tokens": toks[:, t:t + 1],
+             "positions": jnp.full((B, 1), t, jnp.int32)}
+        xd, cache, _ = forward(cfg, params, b, rules=rules, cache=cache,
+                               moe_impl="dense")
+        logits_steps.append(
+            logits_from_hidden(cfg, params, xd, rules, last_only=True))
+    ld = jnp.concatenate(logits_steps, axis=1)
+    np.testing.assert_allclose(np.asarray(ld, np.float32),
+                               np.asarray(lf, np.float32), atol=3e-2)
+
+
+def test_rwkv_decode_matches_full_forward():
+    cfg = get_config("rwkv6-1.6b").reduced()
+    rules = make_rules(cfg, None, None)
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    B, S = 1, 6
+    toks = jnp.asarray(np.random.RandomState(2).randint(
+        0, cfg.vocab_size, (B, S)))
+    full = {"tokens": toks,
+            "positions": jnp.broadcast_to(jnp.arange(S), (B, S))}
+    xf, _, _ = forward(cfg, params, full, rules=rules, moe_impl="dense")
+    lf = logits_from_hidden(cfg, params, xf, rules)
+
+    cache = init_params(cache_specs(cfg, B, S), jax.random.PRNGKey(1),
+                        dtype=None)
+    outs = []
+    for t in range(S):
+        b = {"tokens": toks[:, t:t + 1],
+             "positions": jnp.full((B, 1), t, jnp.int32)}
+        xd, cache, _ = forward(cfg, params, b, rules=rules, cache=cache,
+                               moe_impl="dense")
+        outs.append(logits_from_hidden(cfg, params, xd, rules,
+                                       last_only=True))
+    ld = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(ld, np.float32),
+                               np.asarray(lf, np.float32), atol=3e-2)
+
+
+def test_moe_gshard_matches_dense_when_capacity_ample():
+    cfg = dataclasses.replace(
+        get_config("deepseek-moe-16b").reduced())
+    # huge capacity factor -> no drops -> gshard == dense
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    rules = make_rules(cfg, None, None)
+    params = init_params(moe_specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32) * 0.3
+    yd, auxd = moe_dense(cfg, params, x, rules)
+    yg, auxg = moe_gshard(cfg, params, x, rules)
+    np.testing.assert_allclose(np.asarray(yg), np.asarray(yd), atol=2e-2)
+    assert abs(float(auxd) - float(auxg)) < 1e-4
+
+
+def test_fused_loss_matches_unfused():
+    cfg = get_config("qwen3-32b").reduced()
+    rules = make_rules(cfg, None, None)
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    B, S = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S, cfg.d_model),
+                          jnp.float32)
+    t = jnp.ones((B, S), jnp.int32)
+    l1 = lm_loss(cfg, logits_from_hidden(cfg, params, x, rules), t, rules)
+    l2 = lm_loss_fused(cfg, params, x, t, rules, chunk=8)
+    assert abs(float(l1) - float(l2)) < 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), shift=st.integers(1, 64))
+def test_rope_relative_property(seed, shift):
+    """RoPE property: <rope(q,p), rope(k,p')> depends only on p - p'."""
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(1, 1, 1, 64).astype(np.float32))
+    k = jnp.asarray(rng.randn(1, 1, 1, 64).astype(np.float32))
+    p0 = jnp.asarray([[3]]); p1 = jnp.asarray([[10]])
+    d0 = jnp.sum(apply_rope(q, p0, 1e4) * apply_rope(k, p1, 1e4))
+    d1 = jnp.sum(apply_rope(q, p0 + shift, 1e4)
+                 * apply_rope(k, p1 + shift, 1e4))
+    np.testing.assert_allclose(float(d0), float(d1), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_pspec_dedup_drops_repeated_axis():
+    rules = make_rules(None, None, None)
+    rules.map = {"a": "model", "b": "model"}
+    spec = rules.pspec(("a", "b"))
+    assert spec[0] == "model" and spec[1] is None
+
+
+def test_auto_batch_axes_divisibility():
+    from repro.sharding.rules import _auto_batch_axes
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    assert _auto_batch_axes(FakeMesh(), ("pod", "data"), 256) == \
+        ("pod", "data")
+    assert _auto_batch_axes(FakeMesh(), ("pod", "data"), 1) is None
+    assert _auto_batch_axes(FakeMesh(), ("pod", "data", "model"), 256) == \
+        ("pod", "data")
+    assert _auto_batch_axes(FakeMesh(), ("pod", "data"), 32) == \
+        ("pod", "data")
+
+
+def test_minitron_overrides_applied():
+    cfg = get_config("minitron-4b")
+    rules = make_rules(cfg, SHAPES["train_4k"], None)
+    assert rules.map["heads"] is None
+    assert rules.map["kv_heads"] is None

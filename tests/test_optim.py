@@ -1,0 +1,111 @@
+"""Optimizer + gradient compression tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models.params import ParamSpec, init_params
+from repro.optim import (compress_grad, decompress_grad, cosine_schedule,
+                         opt_init_specs, opt_update)
+
+
+def _toy_cfg(optimizer="adamw", dtype="float32"):
+    cfg = get_config("granite-3-2b").reduced()
+    return dataclasses.replace(cfg, optimizer=optimizer,
+                               opt_state_dtype=dtype)
+
+
+def _toy_problem():
+    specs = {"w": ParamSpec((8, 8), (None, None)),
+             "b": ParamSpec((8,), (None,), init="zeros")}
+    params = init_params(specs, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 8))
+    y = x @ jnp.ones((8, 8)) * 0.5
+    def loss(p):
+        return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+    return specs, params, loss
+
+
+@pytest.mark.parametrize("optimizer,dtype", [
+    ("adamw", "float32"), ("adamw", "bfloat16"),
+    ("adafactor", "float32"), ("adafactor", "bfloat16")])
+def test_optimizer_decreases_loss(optimizer, dtype):
+    cfg = _toy_cfg(optimizer, dtype)
+    specs, params, loss = _toy_problem()
+    state = init_params(opt_init_specs(cfg, specs), jax.random.PRNGKey(2),
+                        dtype=None)
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state = opt_update(cfg, params, g, state, lr=3e-2)
+    l1 = float(loss(params))
+    assert l1 < 0.5 * l0, (l0, l1)
+    assert int(state["count"]) == 60
+
+
+def test_adafactor_memory_is_factored():
+    cfg = _toy_cfg("adafactor")
+    specs = {"w": ParamSpec((64, 32), (None, None))}
+    ospecs = opt_init_specs(cfg, specs)
+    assert ospecs["vr"]["w"].shape == (64,)
+    assert ospecs["vc"]["w"].shape == (32,)
+    assert ospecs["mu"]["w"].shape == (64, 32)
+
+
+def test_grad_clip_applied():
+    cfg = _toy_cfg()
+    specs, params, loss = _toy_problem()
+    state = init_params(opt_init_specs(cfg, specs), jax.random.PRNGKey(2),
+                        dtype=None)
+    huge = jax.tree.map(lambda p: jnp.full_like(p, 1e6), params)
+    new_params, _ = opt_update(cfg, params, huge, state, lr=1e-3)
+    delta = max(float(jnp.abs(a - b).max())
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(new_params)))
+    assert delta < 1.0   # clipped: update magnitude bounded
+
+
+def test_schedule_warmup_and_decay():
+    assert float(cosine_schedule(jnp.asarray(0))) == 0.0
+    peak = float(cosine_schedule(jnp.asarray(2000)))
+    late = float(cosine_schedule(jnp.asarray(90_000)))
+    assert peak == pytest.approx(3e-4, rel=1e-3)
+    assert late < peak
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+def test_compress_roundtrip_error_bounded(rng):
+    g = jnp.asarray(rng.randn(1000).astype(np.float32))
+    codes, scales, err = compress_grad(g)
+    rec = decompress_grad(codes, scales, g.shape)
+    # per-block max error <= scale (1/127 of block max)
+    assert float(jnp.abs(g - rec).max()) <= float(scales.max()) + 1e-6
+    np.testing.assert_allclose(np.asarray(g - rec), np.asarray(err),
+                               atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(1e-3, 1e3))
+def test_error_feedback_accumulates_to_truth(seed, scale):
+    """Property: with error feedback, the SUM of decompressed grads over
+    many steps converges to the sum of true grads (unbiased accumulation)."""
+    rng = np.random.RandomState(seed)
+    true_sum = np.zeros(256, np.float32)
+    sent_sum = np.zeros(256, np.float32)
+    err = None
+    for _ in range(20):
+        g = jnp.asarray((rng.randn(256) * scale).astype(np.float32))
+        true_sum += np.asarray(g)
+        codes, scales, err = compress_grad(g, err)
+        sent_sum += np.asarray(decompress_grad(codes, scales, g.shape))
+    resid = np.abs(true_sum - sent_sum).max()
+    # residual is bounded by one quantization step (plus f32 summation
+    # noise over 20 steps), not 20 quantization steps
+    assert resid <= float(np.abs(np.asarray(err)).max()) + 2e-3 * scale

@@ -1,0 +1,97 @@
+"""ST communication core: epoch protocol, deferred execution, throttling
+invariants, schedule simulator properties. Multi-device value tests run in
+a subprocess (tests stay single-device)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CostModel, ResourcePool, SimOp, faces_sim_ops,
+                        simulate)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# ResourcePool invariants (paper §5.2: finite triggered-op slots)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(cap=st.integers(1, 16), n=st.integers(1, 100))
+def test_resource_pool_never_exceeds_capacity(cap, n):
+    pool = ResourcePool(capacity=cap)
+    for i in range(n):
+        blocker = pool.acquire(i)
+        assert len(pool.in_flight) <= cap
+        if i >= cap:
+            assert blocker is not None and blocker <= i - cap
+        else:
+            assert blocker is None
+    assert pool.high_water <= cap
+
+
+# ---------------------------------------------------------------------------
+# Schedule simulator: the paper's ordering relations must hold
+# ---------------------------------------------------------------------------
+
+def _sim(policy, merged=True, host=False, niter=32, nbytes=4096, res=16):
+    ops = faces_sim_ops(niter, nbytes, merged=merged)
+    return simulate(ops, policy, res, CostModel(), merged=merged,
+                    host_orchestrated=host)
+
+
+def test_st_beats_host_orchestrated():
+    """Fig. 12: ST (offloaded) beats the host-orchestrated baseline."""
+    assert _sim("adaptive") < _sim("adaptive", host=True)
+
+
+def test_throttle_ordering_matches_paper():
+    """Fig. 13: adaptive <= static <= application-level."""
+    t_ad = _sim("adaptive")
+    t_st = _sim("static")
+    t_ap = _sim("application")
+    assert t_ad <= t_st <= t_ap
+
+
+def test_merged_kernels_win():
+    """Fig. 14: merged kernels beat per-neighbor launches."""
+    assert _sim("adaptive", merged=True) < _sim("adaptive", merged=False)
+
+
+@settings(max_examples=20, deadline=None)
+@given(niter=st.integers(2, 64), nbytes=st.integers(64, 1 << 16),
+       res=st.integers(1, 64))
+def test_throttle_ordering_property(niter, nbytes, res):
+    """The adaptive<=static<=application ordering holds across the whole
+    (iterations, message size, resources) space."""
+    t_ad = _sim("adaptive", niter=niter, nbytes=nbytes, res=res)
+    t_st = _sim("static", niter=niter, nbytes=nbytes, res=res)
+    t_ap = _sim("application", niter=niter, nbytes=nbytes, res=res)
+    assert t_ad <= t_st + 1e-9
+    assert t_st <= t_ap + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(res1=st.integers(1, 8), res2=st.integers(9, 64))
+def test_more_resources_never_hurt(res1, res2):
+    assert (_sim("adaptive", res=res2) <= _sim("adaptive", res=res1) + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Multi-device value tests (subprocess: 8 fake devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_faces_all_modes_match_numpy_oracle():
+    """Runs scripts/dev_faces.py: ST x {adaptive,static,none} x
+    {merged,unmerged} + host baseline, all against the numpy oracle,
+    including signal-counter protocol assertions."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "scripts", "dev_faces.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert r.stdout.count("OK") == 7
