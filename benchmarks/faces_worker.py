@@ -1,14 +1,17 @@
 """Faces benchmark worker (runs in its own process so it can claim fake
-devices). Prints one CSV line: name,us_per_call,derived.
+devices). Prints one CSV line: name,us_per_call,derived — plus a
+"#stats" comment line with the scheduled program's descriptor counts.
 
   us_per_call — measured wall-clock per Faces inner-loop iteration on this
                 CPU container (host-dispatch overheads are real; network
                 latencies are not).
   derived     — critical-path time from the calibrated schedule simulator
-                with paper-like cost constants (core/throttle.py), i.e. the
-                number to compare against the paper's relative claims.
+                (core/throttle.py) walking the SAME scheduled descriptor
+                DAG the executor emits, with paper-like cost constants —
+                the number to compare against the paper's relative claims.
 """
 import argparse
+import json
 import os
 import sys
 
@@ -27,6 +30,9 @@ def main():
                     help="enqueue an independent compute kernel per iter")
     ap.add_argument("--resources", type=int, default=16)
     ap.add_argument("--name", default=None)
+    ap.add_argument("--json-dir", default=None,
+                    help="also write a {name}.json record (descriptor "
+                         "stats + timings) into this directory")
     args = ap.parse_args()
 
     grid = tuple(int(x) for x in args.grid.split(","))
@@ -39,47 +45,41 @@ def main():
     import time
     import jax
     import jax.numpy as jnp
-    import numpy as np
     from repro.core import STStream, halo
-    from repro.core.throttle import (CostModel, SimOp, faces_sim_ops,
-                                     simulate)
+    from repro.core.throttle import CostModel, simulate_pipeline
     from repro.launch.mesh import make_mesh
 
     N = (args.block,) * 3
     mesh = make_mesh(grid, ("x", "y", "z"))
 
-    def build():
-        stream = STStream(mesh, ("x", "y", "z"))
-        win = halo.create_faces_window(stream, N)
-        kern = halo.make_faces_kernels(N)
-        state = stream.allocate()
-        for it in range(args.niter):
-            halo.enqueue_faces_iteration(stream, win, N, kern,
-                                         merged=bool(args.merged))
-            if args.overlap:
-                # independent compute kernel (separate buffer, no deps on
-                # the exchange) — paper §6.7
-                stream.launch(lambda a: a @ a, [win.qual("overlapbuf")],
-                              [win.qual("overlapbuf")], label="overlap")
-        return stream, win, state
+    stream = STStream(mesh, ("x", "y", "z"))
+    overlap_kernel = ((lambda a: a @ a), "overlapbuf") if args.overlap \
+        else None
+    extra = {"overlapbuf": ((64, 64), jnp.float32)} if args.overlap else None
+    halo.build_faces_program(stream, N, args.niter,
+                             merged=bool(args.merged),
+                             extra_buffers=extra,
+                             overlap_kernel=overlap_kernel)
+    state = stream.allocate()
 
-    if args.overlap:
-        # add an independent square buffer to the window
-        orig_create = halo.create_faces_window
-
-        def create_with_overlap(stream, n, name="faces"):
-            win = orig_create(stream, n, name)
-            win.buffers["overlapbuf"] = ((64, 64), jnp.float32)
-            return win
-        halo.create_faces_window = create_with_overlap
-
-    stream, win, state = build()
+    throttle = args.throttle
+    merged = bool(args.merged)
+    if args.mode == "host":
+        # the host baseline has no runtime throttling engine — its
+        # resource reclaim is the blocking per-op dispatch itself.
+        # Schedule (and therefore simulate) exactly what run_host
+        # executes; ordering IS preserved by the serialized dispatch,
+        # so ordered edges stay. Merged signal kernels (§5.4) are an
+        # ST-side contribution: the standard active-RMA baseline posts
+        # per-neighbor signals and wire completions.
+        throttle = "none"
+        merged = False
+    sched_opts = dict(throttle=throttle, resources=args.resources,
+                      merged=merged, ordered=bool(args.ordered))
 
     def run_once(st):
-        return stream.synchronize(
-            st, mode=args.mode, throttle=args.throttle,
-            resources=args.resources, merged=bool(args.merged),
-            donate=False, ordered=bool(args.ordered))
+        return stream.synchronize(st, mode=args.mode, donate=False,
+                                  **sched_opts)
 
     state = run_once(state)              # warm-up (compiles)
     reps = int(os.environ.get("FACES_REPS", "1"))
@@ -89,18 +89,31 @@ def main():
     dt = (time.perf_counter() - t0) / reps
     us_per_iter = dt / args.niter * 1e6
 
-    # derived: calibrated simulator on paper-like constants
-    nbytes = int(np.mean([halo.surface_size(N, d)
-                          for d in halo.DIRECTIONS]) * 4)
-    ops = faces_sim_ops(args.niter, nbytes, merged=bool(args.merged))
-    policy = args.throttle if args.mode == "st" else "application"
-    derived = simulate(ops, policy, args.resources, CostModel(),
-                       merged=bool(args.merged),
-                       host_orchestrated=(args.mode == "host")) / args.niter
+    # derived: the calibrated simulator walks the IDENTICAL scheduled
+    # descriptor DAG the executor just emitted
+    progs = stream.scheduled_programs(**sched_opts)
+    derived = simulate_pipeline(
+        progs, CostModel(),
+        host_orchestrated=(args.mode == "host")) / args.niter
 
-    name = args.name or (f"faces_{args.mode}_{args.throttle}"
-                         f"_m{args.merged}_o{args.ordered}_{ndev}r")
+    stats = progs[0].stats()
+    stats["segments"] = len(progs)
+    name = args.name or (f"faces_{args.mode}_{throttle}"
+                         f"_m{int(merged)}_o{args.ordered}_{ndev}r")
     print(f"{name},{us_per_iter:.1f},{derived:.2f}")
+    print(f"#stats {name} puts_per_epoch={stats['puts_per_epoch']:.0f} "
+          f"resource_high_water={stats['resource_high_water']} "
+          f"critical_path_depth={stats['critical_path_depth']} "
+          f"descriptors={stats['descriptors']} "
+          f"dep_edges={stats['dep_edges']}")
+    if args.json_dir:
+        os.makedirs(args.json_dir, exist_ok=True)
+        rec = dict(name=name, mode=args.mode, grid=list(grid),
+                   block=args.block, niter=args.niter,
+                   us_per_iter=us_per_iter, derived_us_per_iter=derived,
+                   **sched_opts, stats=stats)
+        with open(os.path.join(args.json_dir, f"{name}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 """Benchmark harness — one section per paper figure. Prints
-``name,us_per_call,derived`` CSV (derived = calibrated-simulator critical
-path per iteration in us for Faces benches; roofline fraction for dry-run
-rows; tokens/s for throughput rows).
+``name,us_per_call,derived`` CSV (derived = critical path per iteration
+in us from the calibrated simulator walking the scheduled triggered-op
+descriptor DAG for Faces benches; roofline fraction for dry-run rows;
+tokens/s for throughput rows), plus ``#stats`` lines with per-program
+descriptor counts (puts/epoch, resource high-water, critical-path depth).
 
 Sections:
   fig12  Faces overall: ST vs host-orchestrated active RMA (8 & 64 ranks)
@@ -23,6 +25,7 @@ WORKER = os.path.join(ROOT, "benchmarks", "faces_worker.py")
 
 
 def _worker(**kw):
+    kw.setdefault("niter", os.environ.get("BENCH_NITER", "10"))
     cmd = [sys.executable, WORKER]
     for k, v in kw.items():
         cmd += [f"--{k}", str(v)]
@@ -33,7 +36,7 @@ def _worker(**kw):
         print(f"# WORKER FAILED {kw}: {r.stderr[-400:]}", flush=True)
         return
     for line in r.stdout.strip().splitlines():
-        if "," in line:
+        if "," in line or line.startswith("#stats"):
             print(line, flush=True)
 
 

@@ -1,5 +1,6 @@
 """Throttling-algorithm comparison (paper §5.2 / Fig. 13) on a 64-rank
-grid, with the calibrated schedule simulator's derived numbers.
+grid, with derived numbers from the schedule simulator walking the SAME
+scheduled descriptor DAG the executor emits.
 
     PYTHONPATH=src python examples/faces_throttling.py
 """
@@ -9,45 +10,46 @@ os.environ.setdefault("XLA_FLAGS",
 
 import time
 
-import numpy as np
-
 from repro.core import STStream, halo
-from repro.core.throttle import CostModel, faces_sim_ops, simulate
+from repro.core.throttle import CostModel, simulate_pipeline
 from repro.launch.mesh import make_mesh
 
 GRID, N, NITER, RES = (4, 4, 4), (8, 8, 8), 10, 16
 
 
 def run(throttle, mode="st"):
+    # merged signal kernels (§5.4) are an ST-side contribution: the
+    # host-orchestrated active-RMA baseline runs unmerged, matching
+    # benchmarks/faces_worker.py
+    merged = mode == "st"
     mesh = make_mesh(GRID, ("x", "y", "z"))
     stream = STStream(mesh, ("x", "y", "z"))
-    win = halo.create_faces_window(stream, N)
-    kern = halo.make_faces_kernels(N)
+    halo.build_faces_program(stream, N, NITER, merged=merged)
     state = stream.allocate()
-    for _ in range(NITER):
-        halo.enqueue_faces_iteration(stream, win, N, kern, merged=True)
     state = stream.synchronize(state, mode=mode, throttle=throttle,
-                               resources=RES)   # compile + run
+                               resources=RES, merged=merged)  # compile+run
     t0 = time.perf_counter()
     state = stream.synchronize(state, mode=mode, throttle=throttle,
-                               resources=RES)
+                               resources=RES, merged=merged)
     meas = (time.perf_counter() - t0) / NITER * 1e6
 
-    nbytes = int(np.mean([halo.surface_size(N, d)
-                          for d in halo.DIRECTIONS]) * 4)
-    ops = faces_sim_ops(NITER, nbytes, merged=True)
-    sim = simulate(ops, throttle if mode == "st" else "application", RES,
-                   CostModel(), merged=True,
-                   host_orchestrated=(mode == "host")) / NITER
-    return meas, sim
+    progs = stream.scheduled_programs(throttle=throttle, resources=RES,
+                                      merged=merged)
+    sim = simulate_pipeline(progs, CostModel(),
+                            host_orchestrated=(mode == "host")) / NITER
+    stats = progs[0].stats()
+    return meas, sim, stats
 
 
 if __name__ == "__main__":
-    print(f"{'policy':<22}{'measured us/iter':>18}{'simulated us/iter':>20}")
+    print(f"{'policy':<22}{'measured us/iter':>18}{'simulated us/iter':>20}"
+          f"{'hwm':>6}{'depth':>7}")
     for name, thr, mode in (("adaptive (ST)", "adaptive", "st"),
                             ("static (ST)", "static", "st"),
                             ("application (host)", "none", "host")):
-        meas, sim = run(thr, mode)
-        print(f"{name:<22}{meas:>18.0f}{sim:>20.1f}")
+        meas, sim, stats = run(thr, mode)
+        print(f"{name:<22}{meas:>18.0f}{sim:>20.1f}"
+              f"{stats['resource_high_water']:>6}"
+              f"{stats['critical_path_depth']:>7}")
     print("\nexpected ordering (paper Fig. 13): adaptive <= static << "
           "application")

@@ -68,3 +68,6 @@ if __name__ == "__main__":
         for thr in ("adaptive", "static", "none"):
             run("st", thr, merged)
     run("host", merged=True)
+    # merged=False drives the baseline's separate wire completion-signal
+    # dispatches (backends.run_host unit="chained")
+    run("host", merged=False)

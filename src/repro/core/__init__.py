@@ -1,14 +1,24 @@
 """The paper's primary contribution: stream-triggered (ST) communication
-for JAX/TPU — deferred-execution op queues, triggered-op descriptors with
-chained completion signals, throttling, merged kernels, and the Faces
-nearest-neighbor halo exchange; plus the training-side integrations
-(overlapped grad reduction, ring attention transport, EP all-to-all).
+for JAX/TPU — a three-stage compiler pipeline over a triggered-op IR
+(lower -> schedule passes -> three backends: compiled ST executor,
+host-orchestrated baseline, cost simulator), deferred-execution op
+queues, chained completion signals, throttling, merged kernels, and the
+Faces nearest-neighbor halo exchange; plus the training-side
+integrations (overlapped grad reduction, ring attention transport, EP
+all-to-all).
 """
-from repro.core.stream import STStream
+from repro.core.stream import STStream, counters_expected
 from repro.core.window import STWindow
-from repro.core.triggered import TriggeredOp, ResourcePool
-from repro.core.throttle import CostModel, SimOp, simulate, faces_sim_ops
+from repro.core.triggered import (ResourcePool, TriggeredOp,
+                                  TriggeredProgram)
+from repro.core.lower import lower_segment, split_segments
+from repro.core.schedule import schedule
+from repro.core.throttle import (CostModel, faces_programs, simulate_faces,
+                                 simulate_pipeline, simulate_program)
 from repro.core import halo
 
-__all__ = ["STStream", "STWindow", "TriggeredOp", "ResourcePool",
-           "CostModel", "SimOp", "simulate", "faces_sim_ops", "halo"]
+__all__ = ["STStream", "STWindow", "TriggeredOp", "TriggeredProgram",
+           "ResourcePool", "CostModel", "counters_expected",
+           "lower_segment", "split_segments", "schedule",
+           "simulate_program", "simulate_pipeline", "simulate_faces",
+           "faces_programs", "halo"]

@@ -1,0 +1,209 @@
+"""Stage 3 — executors: emit a scheduled descriptor DAG on the mesh.
+
+Both executors walk the SAME :class:`TriggeredProgram` the schedule
+passes produced (the third consumer is the cost simulator in
+:mod:`repro.core.throttle`):
+
+  * :func:`run_compiled` (Fig. 9b, mode="st"): the whole program (all
+    iterations) is traced into ONE jitted shard_map call — the TPU
+    analogue of the GPU SEC executing enqueued descriptors with NIC
+    triggered ops, zero host round-trips. Dependency edges become
+    dataflow (optimization_barrier) ties, so trigger/completion ordering
+    is faithful inside the single compiled program.
+
+  * :func:`run_host` (Fig. 9a, mode="host"): the CPU-orchestrated
+    standard active-RMA baseline — one jitted dispatch per descriptor,
+    host blocking at every epoch boundary (start/complete/wait). Wire
+    completion signals dispatch separately from their payload put, like
+    the MPI runtime's completion handling; dependency edges are implicit
+    in the serialized dispatch order and are not re-emitted.
+
+Signals and completions are REAL counter buffers updated by chained tiny
+puts (paper §3.1–3.2), so tests can assert the epoch protocol.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compat import shard_map
+
+
+def _tie(x, dep):
+    """Make x depend on dep without changing its value (dataflow edge)."""
+    if dep is None:
+        return x
+    x, _ = jax.lax.optimization_barrier((x, dep))
+    return x
+
+
+class _EmitCtx:
+    """Trace-local emission state: completion tokens per put op_id and
+    the per-window post-counter snapshot taken by "start"."""
+
+    def __init__(self):
+        self.tokens: Dict[int, Any] = {}
+        self.trig: Dict[str, Any] = {}
+
+
+def _ppermute(stream, x, direction):
+    return jax.lax.ppermute(x, stream.grid_axes,
+                            stream.perm_for(tuple(direction)))
+
+
+def _emit_completion_signal(stream, node, st, arrival_token):
+    """§3.2 chained completion signal of a put descriptor."""
+    ch = node.chained
+    if ch.wire:
+        # a second triggered put bumping the TARGET's comp counter over
+        # the wire, triggered by the payload's arrival
+        one = _tie(jnp.ones((1, 1), jnp.int32), arrival_token)
+        sig = _ppermute(stream, one, node.direction)
+        st[ch.counter] = st[ch.counter].at[:, ch.slot].add(sig[:, 0])
+    else:
+        # merged/local bump: the arrived payload IS the completion event
+        one = _tie(jnp.ones((1,), jnp.int32), arrival_token)
+        st[ch.counter] = st[ch.counter].at[:, ch.slot].add(one)
+    return st
+
+
+def emit_node(stream, node, st, ctx, *, with_chained=True):
+    """Apply one descriptor's state effect. Shared by both executors."""
+    if node.kind == "kernel":
+        args = [st[r] for r in node.reads]
+        outs = node.fn(*args)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        for w, o in zip(node.writes, outs):
+            st[w] = o
+    elif node.kind == "signal" and node.role == "post":
+        sig = st[node.counter]
+        if node.fused:
+            # merged signal kernel (paper §5.4): one update for all peers
+            upd = jnp.zeros_like(sig)
+            for slot, d in node.slots:
+                arrived = _ppermute(stream, jnp.ones((1, 1), jnp.int32), d)
+                upd = upd.at[:, slot].add(arrived[:, 0])
+            sig = sig + upd
+        else:
+            arrived = _ppermute(stream, jnp.ones((1, 1), jnp.int32),
+                                node.direction)
+            sig = sig.at[:, node.slot].add(arrived[:, 0])
+        st[node.counter] = sig
+    elif node.kind == "start":
+        # origin-side wait for exposure signals: the epoch's puts are
+        # armed by (tied to) the post counter as of this point
+        ctx.trig[node.window] = st[node.counter]
+    elif node.kind == "put":
+        payload = st[node.src]
+        payload = _tie(payload, ctx.trig.get(node.window))
+        for dep in node.deps:
+            payload = _tie(payload, ctx.tokens.get(dep))
+        arrived = _ppermute(stream, payload, node.direction)
+        st[node.dst] = arrived
+        token = arrived.ravel()[:1]
+        ctx.tokens[node.op_id] = token
+        if with_chained and node.chained is not None:
+            st = _emit_completion_signal(stream, node, st, token)
+    elif node.kind == "complete":
+        pass        # epoch-close marker: deps were precomputed by passes
+    elif node.kind == "wait":
+        # wait kernel: all subsequent reads of the window's data buffers
+        # depend on the completion counter
+        dep = st[node.counter]
+        for k in list(st.keys()):
+            if k.startswith(node.window + ".") and not k.endswith("_sig"):
+                st[k] = _tie(st[k], dep)
+    else:
+        raise ValueError(f"cannot emit node kind {node.kind!r}")
+    return st
+
+
+# ---------------------------------------------------------------------------
+# compiled ST executor (Fig. 9b)
+# ---------------------------------------------------------------------------
+
+def run_compiled(stream, prog, state, donate=True):
+    keys = tuple(sorted(state.keys()))
+    cache = getattr(stream, "_compiled_cache", None)
+    if cache is None:
+        cache = stream._compiled_cache = {}
+    ck = (prog.key(), keys, donate)
+    jfn = cache.get(ck)
+    if jfn is None:
+        spec = stream.state_spec()
+
+        def seg_fn(*vals):
+            st = dict(zip(keys, vals))
+            ctx = _EmitCtx()
+            for node in prog.nodes:
+                st = emit_node(stream, node, st, ctx)
+            return tuple(st[k] for k in keys)
+
+        sharded = shard_map(
+            seg_fn, mesh=stream.mesh,
+            in_specs=(spec,) * len(keys), out_specs=(spec,) * len(keys))
+        jfn = cache[ck] = jax.jit(
+            sharded,
+            donate_argnums=tuple(range(len(keys))) if donate else ())
+    out = jfn(*[state[k] for k in keys])
+    return dict(zip(keys, out))
+
+
+# ---------------------------------------------------------------------------
+# host-orchestrated executor (Fig. 9a baseline)
+# ---------------------------------------------------------------------------
+
+_BLOCKING = ("start", "complete", "wait")
+
+
+def run_host(stream, prog, state):
+    for node in prog.nodes:
+        if node.kind == "put" and node.chained is not None \
+                and node.chained.wire:
+            # baseline RMA: payload dispatch, then the completion signal
+            # as its own dispatch (the MPI runtime's completion handling)
+            state = _dispatch_host(stream, node, state, unit="put")
+            state = _dispatch_host(stream, node, state, unit="chained")
+        elif node.kind in ("start", "complete"):
+            pass        # markers: no state effect, just the host block
+        else:
+            state = _dispatch_host(stream, node, state, unit="node")
+        if node.kind in _BLOCKING:
+            jax.block_until_ready(jax.tree.leaves(state)[0])
+    return state
+
+
+def _dispatch_host(stream, node, state, unit):
+    keys = tuple(sorted(state.keys()))
+    cache = getattr(stream, "_host_cache", None)
+    if cache is None:
+        cache = stream._host_cache = {}
+    # deps/epochs excluded: host ordering is the serialized dispatch
+    # itself, so one executable per structural op serves all iterations
+    ck = (unit, node.structural_key(with_deps=False), keys)
+    jfn = cache.get(ck)
+    if jfn is None:
+        spec = stream.state_spec()
+
+        def one_fn(*vals):
+            st = dict(zip(keys, vals))
+            ctx = _EmitCtx()
+            if unit == "chained":
+                st = _emit_completion_signal(
+                    stream, node, st, st[node.dst].ravel()[:1])
+            else:
+                # deps tie through ctx.tokens, which is empty per dispatch:
+                # host ordering comes from the serialized dispatches
+                st = emit_node(stream, node, st, ctx,
+                               with_chained=(unit == "node"))
+            return tuple(st[k] for k in keys)
+
+        sharded = shard_map(
+            one_fn, mesh=stream.mesh,
+            in_specs=(spec,) * len(keys), out_specs=(spec,) * len(keys))
+        jfn = cache[ck] = jax.jit(sharded)
+    out = jfn(*[state[k] for k in keys])
+    return dict(zip(keys, out))

@@ -1,0 +1,40 @@
+"""Version-compatibility shims over the installed JAX.
+
+The repo targets the modern surface (``jax.shard_map``, ``check_vma``,
+``jax.sharding.AxisType``) but must run on older releases where
+``shard_map`` still lives in ``jax.experimental`` with the ``check_rep``
+spelling and ``AxisType`` does not exist. Feature-detect once at import;
+callers use these wrappers and never touch the moving targets directly.
+"""
+from __future__ import annotations
+
+import jax
+
+_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+if not _NEW_SHARD_MAP:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` with the old ``check_rep`` kwarg papered over."""
+    if _NEW_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check_vma)
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with ``axis_types`` only where it exists."""
+    shape, axes = tuple(shape), tuple(axes)
+    mk = getattr(jax, "make_mesh", None)
+    if mk is None:
+        from jax.experimental import mesh_utils
+        return jax.sharding.Mesh(mesh_utils.create_device_mesh(shape), axes)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return mk(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:
+            pass
+    return mk(shape, axes)

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compat import shard_map
 from repro.models.moe import _capacity, _router, _shared
 
 
@@ -54,7 +55,7 @@ def moe_a2a(cfg, params, x, rules):
         aux = jax.lax.pmean(aux, "model")
         return out, aux
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(x_spec, router_spec, w_spec, w_spec, w_spec),
         out_specs=(x_spec, jax.sharding.PartitionSpec()),

@@ -143,7 +143,7 @@ def compare_kernel():
 # Program builders
 # ---------------------------------------------------------------------------
 
-def create_faces_window(stream, n, name="faces"):
+def create_faces_window(stream, n, name="faces", extra_buffers=None):
     """Window with: src block, halo recv buffer per direction, accumulator,
     and an iteration counter so kernels are iteration-independent (the host
     baseline must not recompile per iteration)."""
@@ -154,6 +154,8 @@ def create_faces_window(stream, n, name="faces"):
     for d in DIRECTIONS:
         bufs[f"recv{d[0]}{d[1]}{d[2]}"] = ((surface_size(n, d),), jnp.float32)
         bufs[f"send{d[0]}{d[1]}{d[2]}"] = ((surface_size(n, d),), jnp.float32)
+    if extra_buffers:
+        bufs.update(extra_buffers)
     return stream.create_window(name, bufs, DIRECTIONS)
 
 
@@ -196,3 +198,27 @@ def enqueue_faces_iteration(stream, win, n, kernels, merged=True):
                           [q("acc")], label=f"unpack{d}")
         stream.launch(kernels["compare"], [q("acc")], [q("res")],
                       label="compare")
+
+
+def build_faces_program(stream, n, niter, merged=True, kernels=None,
+                        host_sync_every=0, extra_buffers=None,
+                        overlap_kernel=None, name="faces"):
+    """Enqueue the FULL Faces benchmark program: window + kernels + niter
+    inner-loop iterations. ``host_sync_every=k`` inserts an application-
+    level host_sync() every k iterations (paper §5.2.1 throttling — each
+    chunk becomes its own compiled segment). ``overlap_kernel`` enqueues
+    an independent compute launch per iteration (paper §6.7); it runs on
+    a buffer from ``extra_buffers``. Returns (window, kernels)."""
+    win = create_faces_window(stream, n, name=name,
+                              extra_buffers=extra_buffers)
+    kernels = kernels or make_faces_kernels(n)
+    for it in range(niter):
+        enqueue_faces_iteration(stream, win, n, kernels, merged=merged)
+        if overlap_kernel is not None:
+            fn, buf = overlap_kernel
+            stream.launch(fn, [win.qual(buf)], [win.qual(buf)],
+                          label="overlap")
+        if host_sync_every and (it + 1) % host_sync_every == 0 \
+                and it + 1 < niter:
+            stream.host_sync()
+    return win, kernels

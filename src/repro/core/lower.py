@@ -1,0 +1,129 @@
+"""Stage 1 — lowering: STStream op queue -> triggered-op descriptor DAG.
+
+The enqueue API (post/start/put/complete/wait/launch) records opaque
+`_Op` entries; this pass lowers one hostsync-delimited segment of that
+queue into a :class:`TriggeredProgram` of real :class:`TriggeredOp`
+descriptors with named trigger/completion counter slots:
+
+  * post   -> one "post" signal descriptor per neighbor (a tiny triggered
+              put bumping the target's ``win.post_sig[opposite(d)]`` slot,
+              paper §5.1.2); the merged-signal pass may later fuse them.
+  * start  -> a "start" marker snapshotting the post counter; every put
+              of the epoch is armed by it (trigger_counter).
+  * put    -> a payload put descriptor, DEFERRED to its epoch's complete
+              (the ST executor fires enqueued descriptors at the trigger
+              event complete() emits). Each put carries its §3.2 chained
+              completion signal bumping ``win.comp_sig[opposite(d)]`` on
+              the target.
+  * complete -> emits the epoch's deferred puts, then an epoch-close
+              marker; the global epoch index increments here.
+  * wait   -> a wait-kernel descriptor polling the completion counter.
+
+Pure structural transformation: no jax imports, no policy decisions —
+throttling/ordering/fusion happen in :mod:`repro.core.schedule`.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.triggered import TriggeredOp, TriggeredProgram
+
+
+def buffer_nbytes(stream, qualified: str) -> int:
+    """Per-rank byte size of a window buffer like ``"faces.send101"``."""
+    for win in stream.windows.values():
+        prefix = win.name + "."
+        if qualified.startswith(prefix):
+            base = qualified[len(prefix):]
+            if base in win.buffers:
+                shape, dtype = win.buffers[base]
+                return int(np.prod(shape)) * np.dtype(dtype).itemsize
+    return 0
+
+
+def lower_segment(stream, seg) -> TriggeredProgram:
+    """Lower one segment of the deferred-op queue onto the IR."""
+    nodes: List[TriggeredOp] = []
+    pending: Dict[str, List[TriggeredOp]] = {}   # window -> epoch's puts
+    epoch = 0
+
+    for op in seg:
+        if op.kind == "kernel":
+            nodes.append(TriggeredOp(
+                "kernel", fn=op.fn, reads=op.reads, writes=op.writes,
+                label=op.label))
+        elif op.kind == "post":
+            win = op.window
+            for d in win.group:
+                nodes.append(TriggeredOp(
+                    "signal", window=win.name, role="post",
+                    direction=tuple(d),
+                    slot=stream.opposite_index(win, d),
+                    counter=win.post_sig, wire=True,
+                    label=f"post{tuple(d)}"))
+        elif op.kind == "start":
+            win = op.window
+            nodes.append(TriggeredOp(
+                "start", window=win.name, counter=win.post_sig,
+                label=op.label))
+        elif op.kind == "put":
+            win = op.window
+            d = tuple(op.put["direction"])
+            slot = stream.opposite_index(win, d)
+            chained = TriggeredOp(
+                "signal", window=win.name, role="completion",
+                direction=d, slot=slot, counter=win.comp_sig, wire=True,
+                label=f"comp{d}")
+            pending.setdefault(win.name, []).append(TriggeredOp(
+                "put", window=win.name, src=op.put["src"],
+                dst=op.put["dst"], direction=d,
+                nbytes=buffer_nbytes(stream, op.put["src"]),
+                trigger_counter=f"{win.post_sig}[{win.group.index(d)}]",
+                completion_counter=f"{win.comp_sig}[{slot}]",
+                chained=chained, label=f"put{d}"))
+        elif op.kind == "complete":
+            win = op.window
+            for p in pending.pop(win.name, []):
+                p.epoch = epoch
+                p.threshold = epoch + 1
+                p.chained.epoch = epoch
+                nodes.append(p)
+            nodes.append(TriggeredOp(
+                "complete", window=win.name, epoch=epoch))
+            epoch += 1
+        elif op.kind == "wait":
+            win = op.window
+            nodes.append(TriggeredOp(
+                "wait", window=win.name, counter=win.comp_sig))
+        else:
+            raise ValueError(f"cannot lower op kind {op.kind!r}")
+
+    if pending:
+        # a put's descriptor only fires at its epoch's complete(); an
+        # unclosed access epoch at a host_sync/end-of-program would be
+        # silent data loss, so refuse to lower it
+        raise ValueError(
+            "puts enqueued without a closing complete() for window(s) "
+            f"{sorted(pending)} — close the access epoch before "
+            "host_sync() or synchronize()")
+
+    return TriggeredProgram(nodes=nodes, windows=dict(stream.windows))
+
+
+def split_segments(program) -> List[list]:
+    """Split the raw op queue at host_sync() points (paper §5.2.1
+    application-level throttling: each segment is its own device program
+    with a full host block between them)."""
+    segs, cur = [], []
+    for op in program:
+        if op.kind == "hostsync":
+            if cur:
+                segs.append(cur)
+            cur = []
+        else:
+            cur.append(op)
+    if cur:
+        segs.append(cur)
+    return segs

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compat import shard_map
+
 NEG_INF = -1e30
 
 
@@ -61,7 +63,7 @@ def sharded_decode_attention(q, k, v, positions, *, mesh, axis="data"):
         out = acc_g / jnp.maximum(l_g, 1e-30)[..., None].astype(accs.dtype)
         return out[:, None].astype(q.dtype)                  # (B,1,H,hd)
 
-    return jax.shard_map(
+    return shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None),
                   P()),
@@ -112,7 +114,7 @@ def ring_attention_train(q, k, v, *, mesh, axis="data", causal=True):
         out = acc / jnp.maximum(l, 1e-30)[..., None]
         return jnp.einsum("bhqd->bqhd", out).astype(q.dtype)
 
-    return jax.shard_map(
+    return shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(None, axis, None, None),) * 3,
         out_specs=P(None, axis, None, None), check_vma=False,

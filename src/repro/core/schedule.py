@@ -1,0 +1,143 @@
+"""Stage 2 — schedule passes: pure graph transforms on the descriptor DAG.
+
+Each pass takes a :class:`TriggeredProgram` fresh from lowering and
+rewrites nodes/edges; none of them touch jax or device state, so the
+exact schedule the executors emit is also the schedule the simulator
+walks (the benchmark "derived" column can no longer drift from the code
+that runs).
+
+Passes
+  * :func:`fuse_signals`  — merged-signal-kernel fusion (paper §5.4):
+    collapse per-neighbor "post" signal descriptors into ONE fused
+    descriptor per window, and turn each put's §3.2 chained wire signal
+    into a local counter bump tied to the payload's arrival.
+  * :func:`ordering_pass` — P2P message-matching semantics (paper §4.3 /
+    §7(1)): serialize every put on the previous put's completion.
+  * :func:`throttle_pass` — finite triggered-op slots (paper §5.2):
+      - "adaptive"  (§5.2.3): put i depends on completion of put i-R,
+        the sliding-window recapture of the oldest slot;
+      - "static"    (§5.2.2): epoch e puts depend on ALL epoch e-1
+        completions, and when an epoch alone exhausts the R slots the
+        runtime's weak sync fires: the next put depends on ALL puts of
+        the previous R-window. Static's dependency set therefore
+        contains adaptive's — the derived times order the way Fig. 13
+        does by construction;
+      - "application" (§5.2.1) places no edges here — it is expressed as
+        host_sync() program splits at lowering time;
+      - "none" places no edges (infinite slots).
+    Always records the ResourcePool high-water mark in program meta.
+
+:func:`schedule` is the driver applying all three in order.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+from repro.core.triggered import ResourcePool, TriggeredOp, TriggeredProgram
+
+THROTTLE_POLICIES = ("adaptive", "static", "application", "none")
+
+
+def fuse_signals(prog: TriggeredProgram, merged: bool) -> TriggeredProgram:
+    """Merged-signal-kernel fusion (paper §5.4)."""
+    prog.meta["merged"] = merged
+    if not merged:
+        return prog
+    fused_nodes = []
+    i = 0
+    nodes = prog.nodes
+    while i < len(nodes):
+        n = nodes[i]
+        if n.kind == "signal" and n.role == "post" and not n.fused:
+            j = i
+            group = []
+            while (j < len(nodes) and nodes[j].kind == "signal"
+                   and nodes[j].role == "post"
+                   and nodes[j].window == n.window):
+                group.append(nodes[j])
+                j += 1
+            fused_nodes.append(TriggeredOp(
+                "signal", window=n.window, role="post", counter=n.counter,
+                fused=True,
+                slots=tuple((g.slot, g.direction) for g in group),
+                label=f"post_merged[{len(group)}]"))
+            i = j
+        else:
+            fused_nodes.append(n)
+            i += 1
+    for n in fused_nodes:
+        if n.kind == "put" and n.chained is not None:
+            # TPU-idiomatic completion: the arrived payload IS the
+            # completion event at the target — bump the target counter
+            # locally, tied to arrival, instead of a second wire signal.
+            # Saves one tiny collective per put (26/iteration in Faces).
+            n.chained.wire = False
+            n.chained.fused = True
+    prog.nodes = fused_nodes
+    return prog
+
+
+def ordering_pass(prog: TriggeredProgram, ordered: bool) -> TriggeredProgram:
+    """P2P message-matching: chain each put on its predecessor."""
+    prog.meta["ordered"] = ordered
+    if not ordered:
+        return prog
+    prev = None
+    for n in prog.nodes:
+        if n.kind == "put":
+            if prev is not None:
+                n.deps += (prev,)
+            prev = n.op_id
+    return prog
+
+
+def throttle_pass(prog: TriggeredProgram, policy: str,
+                  resources: int) -> TriggeredProgram:
+    """Throttling as dependency edges over finite descriptor slots."""
+    if policy not in THROTTLE_POLICIES:
+        raise ValueError(f"unknown throttle policy {policy!r}; "
+                         f"expected one of {THROTTLE_POLICIES}")
+    # pool reclaim mirrors each policy so the high-water mark is the
+    # number of descriptor slots the schedule actually holds in flight:
+    # adaptive recaptures the oldest slot per put past capacity; static
+    # reclaims whole windows at its barriers; none/application never
+    # reclaim within a segment.
+    unbounded = policy in ("none", "application")
+    pool = ResourcePool(capacity=(1 << 30) if unbounded else resources)
+    puts = prog.puts()
+    by_epoch = defaultdict(list)
+    for p in puts:
+        by_epoch[p.epoch].append(p.op_id)
+    put_ids = [p.op_id for p in puts]
+    prev_epoch = None
+    for i, p in enumerate(puts):
+        if policy == "static":
+            barrier = (i >= resources and i % resources == 0)
+            if p.epoch != prev_epoch or barrier:
+                pool.release_all()   # epoch barrier / §5.2.2 weak sync
+            prev_epoch = p.epoch
+            if p.epoch >= 1:
+                p.deps += tuple(by_epoch.get(p.epoch - 1, ()))
+            if barrier:
+                # weak sync inside the runtime (§5.2.2): reclaim the
+                # whole exhausted R-window before posting more
+                p.deps += tuple(put_ids[i - resources:i])
+        blocker = pool.acquire(p.op_id)
+        if policy == "adaptive" and blocker is not None:
+            p.deps += (blocker,)
+    for p in puts:
+        p.deps = tuple(dict.fromkeys(p.deps))   # dedupe, keep order
+    prog.meta["throttle"] = policy
+    prog.meta["resources"] = resources
+    prog.meta["resource_high_water"] = pool.high_water
+    return prog
+
+
+def schedule(prog: TriggeredProgram, *, throttle: str = "adaptive",
+             resources: int = 64, merged: bool = True,
+             ordered: bool = False) -> TriggeredProgram:
+    """Apply all schedule passes; returns the same (mutated) program."""
+    prog = fuse_signals(prog, merged)
+    prog = ordering_pass(prog, ordered)
+    prog = throttle_pass(prog, throttle, resources)
+    return prog

@@ -2,52 +2,54 @@
 
 The host *enqueues* operations (post / start / put / complete / wait /
 kernel launches) and returns immediately; nothing executes until
-``synchronize``. Two executors give the paper's A/B comparison:
+``synchronize``. Execution is a three-stage compiler pipeline over the
+triggered-op IR (repro.core.triggered):
+
+    enqueue API --(1) lower.py--> TriggeredProgram DAG
+                --(2) schedule.py passes--> scheduled DAG (+dep edges)
+                --(3) backends.py / throttle.py--> one of three emitters
+
+Stage-3 emitters all consume the SAME scheduled DAG:
 
   * mode="st"   (Fig. 9b): the WHOLE queue (all iterations) is traced into
-    ONE jitted shard_map program — the TPU analogue of the GPU SEC executing
-    enqueued descriptors with NIC triggered ops, zero host round-trips.
-    ``synchronize`` is the single host sync at the end.
+    ONE jitted shard_map program — the TPU analogue of the GPU SEC
+    executing enqueued descriptors with NIC triggered ops, zero host
+    round-trips. ``synchronize`` is the single host sync at the end.
 
-  * mode="host" (Fig. 9a): each operation group runs as its own jitted call
+  * mode="host" (Fig. 9a): each descriptor runs as its own jitted call
     with host blocking at every epoch boundary — the CPU-orchestrated
     standard active-RMA baseline.
 
-Signals and completions are REAL counter buffers updated by chained tiny
-puts (paper §3.1–3.2), so tests can assert the epoch protocol, and
-dependencies (optimization_barrier edges) encode trigger/completion
-ordering so schedules are faithful.
+  * the cost simulator (core/throttle.py) walks the identical schedule,
+    so benchmarks' "derived" column cannot drift from what executes.
 
 Throttling (paper §5.2) constrains put issue through a finite ResourcePool:
   * "application": the app inserts host_sync() points (program splits)
   * "static":  epoch e puts depend on ALL epoch e-1 completions
   * "adaptive": put i depends only on completion of put i-R (sliding window)
+These are schedule passes (dependency-edge transforms), not emission-time
+branches.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.triggered import ResourcePool, TriggeredOp
+from repro.core import backends
+from repro.core.lower import lower_segment, split_segments
+from repro.core.schedule import schedule
+from repro.core.triggered import TriggeredProgram
 from repro.core.window import STWindow
-
-
-def _tie(x, dep):
-    """Make x depend on dep without changing its value."""
-    if dep is None:
-        return x
-    x, _ = jax.lax.optimization_barrier((x, dep))
-    return x
 
 
 @dataclass
 class _Op:
+    """Raw enqueue-API record; lowered onto the triggered-op IR."""
     kind: str
     window: Optional[STWindow] = None
     fn: Optional[Callable] = None
@@ -63,18 +65,30 @@ class _Op:
 
 
 class STStream:
-    """Deferred op queue over a process-grid mesh."""
+    """Deferred op queue over a process-grid mesh.
 
-    def __init__(self, mesh: Mesh, grid_axes: Sequence[str],
-                 periodic: bool = True):
+    ``mesh=None`` (with an explicit ``grid_shape``) builds a device-free
+    stream whose programs can be lowered, scheduled, and simulated but
+    not executed — used by the cost model and schedule unit tests.
+    """
+
+    def __init__(self, mesh: Optional[Mesh], grid_axes: Sequence[str],
+                 periodic: bool = True,
+                 grid_shape: Optional[Sequence[int]] = None):
         self.mesh = mesh
         self.grid_axes = tuple(grid_axes)
-        self.grid_shape = tuple(mesh.shape[a] for a in self.grid_axes)
+        if mesh is not None:
+            self.grid_shape = tuple(mesh.shape[a] for a in self.grid_axes)
+        else:
+            if grid_shape is None:
+                raise ValueError("grid_shape is required when mesh is None")
+            self.grid_shape = tuple(grid_shape)
         self.num_ranks = int(np.prod(self.grid_shape))
         self.periodic = periodic
         self.program: List[_Op] = []
         self.windows: Dict[str, STWindow] = {}
         self._perm_cache: Dict[tuple, list] = {}
+        self._sched_cache: Dict[tuple, List[TriggeredProgram]] = {}
 
     # -- window management --------------------------------------------------
     def create_window(self, name, buffers, group) -> STWindow:
@@ -123,6 +137,13 @@ class STStream:
 
     def clear(self):
         self.program = []
+        self._sched_cache.clear()
+        # jitted-executable caches key on id(fn) of kernel closures; a
+        # rebuild creates fresh closures, so stale entries would pin old
+        # programs and executables forever
+        for cache in ("_compiled_cache", "_host_cache"):
+            if hasattr(self, cache):
+                getattr(self, cache).clear()
 
     # -- neighbor permutation -------------------------------------------------
     def perm_for(self, direction: tuple) -> list:
@@ -149,256 +170,52 @@ class STStream:
         self._perm_cache[direction] = pairs
         return pairs
 
-    def _opposite_index(self, win: STWindow, direction) -> int:
+    def opposite_index(self, win: STWindow, direction) -> int:
         opp = tuple(-x for x in direction)
         return win.group.index(opp)
 
-    # -- execution -------------------------------------------------------------
+    # -- compile pipeline: lower (1) + schedule (2) ---------------------------
+    def scheduled_programs(self, *, throttle: str = "adaptive",
+                           resources: int = 64, merged: bool = True,
+                           ordered: bool = False) -> List[TriggeredProgram]:
+        """Lower the op queue and run the schedule passes; one scheduled
+        descriptor DAG per host_sync-delimited segment. Cached per
+        (queue, options) so repeated synchronize calls reuse programs
+        (and therefore compiled executables)."""
+        key = (tuple(op.cache_key() for op in self.program),
+               throttle, resources, merged, ordered)
+        progs = self._sched_cache.get(key)
+        if progs is None:
+            progs = [
+                schedule(lower_segment(self, seg), throttle=throttle,
+                         resources=resources, merged=merged, ordered=ordered)
+                for seg in split_segments(self.program)]
+            self._sched_cache[key] = progs
+        return progs
+
+    # -- execution: emit (3) ---------------------------------------------------
     def synchronize(self, state, mode: str = "st", throttle: str = "adaptive",
                     resources: int = 64, merged: bool = True,
                     donate: bool = True, ordered: bool = False):
         """Execute the enqueued program; returns the new state.
 
         mode="st": one compiled program, single host sync (this call).
-        mode="host": per-op dispatch with blocking at epoch boundaries.
+        mode="host": per-descriptor dispatch, blocking at epoch boundaries.
         """
-        segments = self._split_segments()
-        for seg in segments:
+        if self.mesh is None:
+            raise ValueError("cannot execute a device-free stream "
+                             "(constructed with mesh=None)")
+        for prog in self.scheduled_programs(
+                throttle=throttle, resources=resources, merged=merged,
+                ordered=ordered):
             if mode == "st":
-                state = self._run_segment_compiled(seg, state, throttle,
-                                                   resources, merged, donate,
-                                                   ordered)
+                state = backends.run_compiled(self, prog, state,
+                                              donate=donate)
             else:
-                state = self._run_segment_host(seg, state, ordered)
+                state = backends.run_host(self, prog, state)
             # application-level sync between segments: full host block
             jax.block_until_ready(jax.tree.leaves(state)[0])
         return state
-
-    def _split_segments(self):
-        segs, cur = [], []
-        for op in self.program:
-            if op.kind == "hostsync":
-                if cur:
-                    segs.append(cur)
-                cur = []
-            else:
-                cur.append(op)
-        if cur:
-            segs.append(cur)
-        return segs
-
-    # -- compiled (ST) execution ----------------------------------------------
-    def _run_segment_compiled(self, seg, state, throttle, resources, merged,
-                              donate, ordered=False):
-        keys = sorted(state.keys())
-        ck = (tuple(op.cache_key() for op in seg), tuple(keys), throttle,
-              resources, merged, donate, ordered)
-        cache = getattr(self, "_cfc", None)
-        if cache is None:
-            cache = self._cfc = {}
-        jfn = cache.get(ck)
-        if jfn is None:
-            spec = self.state_spec()
-
-            def seg_fn(*vals):
-                st = dict(zip(keys, vals))
-                st = self._emit(seg, st, throttle=throttle,
-                                resources=resources, merged=merged,
-                                compiled=True, ordered=ordered)
-                return tuple(st[k] for k in keys)
-
-            sharded = jax.shard_map(
-                seg_fn, mesh=self.mesh,
-                in_specs=(spec,) * len(keys), out_specs=(spec,) * len(keys))
-            jfn = cache[ck] = jax.jit(
-                sharded,
-                donate_argnums=tuple(range(len(keys))) if donate else ())
-        out = jfn(*[state[k] for k in keys])
-        return dict(zip(keys, out))
-
-    # -- host-orchestrated (baseline) execution --------------------------------
-    def _run_segment_host(self, seg, state, ordered=False):
-        """Fig. 9a: one dispatch per op, blocking at epoch sync points.
-        Each put issues as its own host dispatch; the host tracks the
-        epoch's issued puts so MPI_Win_complete can emit the completion
-        signals (in the real baseline the MPI runtime holds this state)."""
-        py_deferred: Dict[str, tuple] = {}
-        for op in seg:
-            blocking = op.kind in ("complete", "wait", "start")
-            pre = None
-            if op.kind == "put":
-                py_deferred.setdefault(op.window.name, ())
-                py_deferred[op.window.name] += (
-                    tuple(sorted(op.put.items())),)
-            if op.kind == "complete":
-                pre = py_deferred.pop(op.window.name, ())
-            state = self._dispatch_ops_host((op,), state, pre, ordered)
-            if blocking:
-                jax.block_until_ready(jax.tree.leaves(state)[0])
-        return state
-
-    def _dispatch_ops_host(self, ops, state, pre=None, ordered=False):
-        keys = sorted(state.keys())
-        ck = (tuple(op.cache_key() for op in ops), tuple(keys), pre, ordered)
-        cache = getattr(self, "_hfc", None)
-        if cache is None:
-            cache = self._hfc = {}
-        fn = cache.get(ck)
-        if fn is None:
-            fn = cache[ck] = self._host_fn_build(ops, tuple(keys), pre,
-                                                 ordered)
-        out = fn(*[state[k] for k in keys])
-        return dict(zip(keys, out))
-
-    def _host_fn_build(self, ops, keys, pre=None, ordered=False):
-        spec = self.state_spec()
-        preload = None
-        if pre is not None and ops[0].kind == "complete":
-            preload = {ops[0].window.name: [dict(t) for t in pre]}
-
-        def seg_fn(*vals):
-            st = dict(zip(keys, vals))
-            st = self._emit(list(ops), st, throttle="none", resources=1 << 30,
-                            merged=False, compiled=False, preload=preload,
-                            ordered=ordered)
-            return tuple(st[k] for k in keys)
-
-        sharded = jax.shard_map(
-            seg_fn, mesh=self.mesh,
-            in_specs=(spec,) * len(keys), out_specs=(spec,) * len(keys))
-        return jax.jit(sharded)
-
-    # -- op emission (shared by both executors) --------------------------------
-    def _emit(self, seg, st, *, throttle, resources, merged, compiled,
-              preload=None, ordered=False):
-        # ordered=True: P2P message-matching semantics — each send/recv pair
-        # is serialized on the previous one (paper §4.3 / §7(1)); RMA puts
-        # within an epoch are unordered (ordered=False).
-        pool = ResourcePool(capacity=resources)
-        comp_events: Dict[int, Any] = {}      # op_id -> completion token
-        epoch_events: List[List[Any]] = [[]]  # per-epoch completions
-        deferred: Dict[str, List[dict]] = dict(preload or {})
-        post_dep: Dict[str, Any] = {}
-        axis = self.grid_axes
-
-        def ppermute(x, direction):
-            return jax.lax.ppermute(x, axis, self.perm_for(direction))
-
-        op_counter = [0]
-
-        for op in seg:
-            if op.kind == "kernel":
-                args = [st[r] for r in op.reads]
-                outs = op.fn(*args)
-                if not isinstance(outs, (tuple, list)):
-                    outs = (outs,)
-                for w, o in zip(op.writes, outs):
-                    st[w] = o
-            elif op.kind == "post":
-                win = op.window
-                # signal exposure-epoch-open to every origin: one tiny
-                # triggered put per neighbor (paper §5.1.2), arriving in the
-                # slot indexed by the opposite direction.
-                incs = []
-                for j, d in enumerate(win.group):
-                    one = jnp.ones((1, 1), jnp.int32)
-                    arrived = ppermute(one, d)
-                    tgt_slot = self._opposite_index(win, d)
-                    incs.append((tgt_slot, arrived))
-                sig = st[win.post_sig]
-                if merged:  # merged signal kernel (paper §5.4)
-                    upd = jnp.zeros_like(sig)
-                    for slot, a in incs:
-                        upd = upd.at[:, slot].add(a[:, 0])
-                    sig = sig + upd
-                else:
-                    for slot, a in incs:
-                        sig = sig.at[:, slot].add(a[:, 0])
-                st[win.post_sig] = sig
-            elif op.kind == "start":
-                # origin-side wait for exposure signals: subsequent puts are
-                # tied to the post counter (GPU wait kernel / dataflow edge)
-                post_dep[op.window.name] = st[op.window.post_sig]
-            elif op.kind == "put":
-                if compiled:
-                    # ST: enqueue the triggered descriptor; fires at the
-                    # trigger event emitted by complete() (deferred).
-                    deferred.setdefault(op.window.name, []).append(op.put)
-                else:
-                    # baseline RMA: the put issues immediately when called
-                    # (host-dispatched); completion signal sent at complete.
-                    win = op.window
-                    payload = _tie(st[op.put["src"]],
-                                   post_dep.get(win.name))
-                    # host-mode ordering is implicit: each put is its own
-                    # blocking-ordered dispatch (P2P == RMA here; the cost
-                    # difference is modeled in the simulator's derived col)
-                    arrived = ppermute(payload, op.put["direction"])
-                    st[op.put["dst"]] = arrived
-                    deferred.setdefault(win.name, []).append(
-                        dict(op.put, done=True))
-            elif op.kind == "complete":
-                win = op.window
-                puts = deferred.pop(win.name, [])
-                comp_incs = []
-                if not compiled:
-                    for p in puts:
-                        one = _tie(jnp.ones((1, 1), jnp.int32),
-                                   st[p["dst"]].ravel()[:1])
-                        sig = ppermute(one, p["direction"])
-                        slot = self._opposite_index(win, p["direction"])
-                        st[win.comp_sig] = st[win.comp_sig].at[:, slot].add(
-                            sig[:, 0])
-                    epoch_events.append([])
-                    continue
-                for p in puts:
-                    payload = st[p["src"]]
-                    payload = _tie(payload, post_dep.get(win.name))
-                    # throttling dependency (trigger-resource reuse)
-                    op_id = op_counter[0]; op_counter[0] += 1
-                    blocker = pool.acquire(op_id)
-                    if ordered and comp_events:
-                        payload = _tie(payload,
-                                       comp_events[max(comp_events)])
-                    if throttle == "adaptive" and blocker is not None:
-                        payload = _tie(payload, comp_events.get(blocker))
-                    elif throttle == "static" and len(epoch_events) >= 2:
-                        for ev in epoch_events[-2]:
-                            payload = _tie(payload, ev)
-                    arrived = ppermute(payload, p["direction"])
-                    st[p["dst"]] = arrived
-                    slot = self._opposite_index(win, p["direction"])
-                    if merged:
-                        # TPU-idiomatic completion (beyond-paper, see
-                        # EXPERIMENTS §Perf): the arrived payload IS the
-                        # completion event at the target — bump the target
-                        # counter locally, tied to arrival, instead of a
-                        # second wire signal. Saves one tiny collective per
-                        # put (26/iteration in Faces).
-                        one = _tie(jnp.ones((1,), jnp.int32),
-                                   arrived.ravel()[:1])
-                        st[win.comp_sig] = st[win.comp_sig].at[:, slot].add(
-                            one)
-                    else:
-                        # paper §3.2 chained signal: a second triggered put
-                        # bumping the TARGET's comp counter over the wire.
-                        one = _tie(jnp.ones((1, 1), jnp.int32),
-                                   arrived.ravel()[:1])
-                        sig = ppermute(one, p["direction"])
-                        st[win.comp_sig] = st[win.comp_sig].at[:, slot].add(
-                            sig[:, 0])
-                    ev = arrived.ravel()[:1]
-                    comp_events[op_id] = ev
-                    epoch_events[-1].append(ev)
-                epoch_events.append([])
-            elif op.kind == "wait":
-                win = op.window
-                # wait kernel: all subsequent reads depend on the comp counter
-                dep = st[win.comp_sig]
-                for k in list(st.keys()):
-                    if k.startswith(win.name + ".") and not k.endswith("_sig"):
-                        st[k] = _tie(st[k], dep)
-        return st
 
 
 def counters_expected(niter: int, npeers: int):

@@ -1,24 +1,37 @@
-"""Throttling policies (paper §5.2) + an event-driven schedule simulator.
+"""Cost model + event-driven simulator over the scheduled descriptor DAG.
 
-The policies themselves are enforced at trace time in stream.py (dependency
-edges). This module adds the analytic model used by benchmarks' "derived"
-column: given per-op costs, compute the critical-path completion time of a
-Faces-style program under each policy — the CPU container can't reproduce
-Slingshot/MI250 latencies, so wall-clock A/B numbers are complemented with
-this calibrated simulation.
+This is the third stage-3 backend: it walks the SAME
+:class:`TriggeredProgram` the executors in :mod:`repro.core.backends`
+emit, so the benchmarks' "derived" column is computed from the identical
+schedule the device runs — throttling, ordering, and signal-fusion
+decisions all arrive as structure (dependency edges, fused nodes), never
+as policy branches re-implemented here.
 
-Cost parameters (defaults loosely follow the paper's system: host dispatch
-and kernel-launch costs dominate small-message halo exchange):
-  t_dispatch — host enqueue of one op (CPU -> queue)        [us]
-  t_launch   — device kernel launch/teardown                [us]
-  t_sync     — host<->device synchronization (hipStreamSync)[us]
-  t_put(b)   — network put latency for b bytes              [us]
-  t_signal   — tiny signal put                              [us]
+The CPU container can't reproduce Slingshot/MI250 latencies, so
+wall-clock A/B numbers are complemented with this calibrated simulation.
+Cost parameters (defaults loosely follow the paper's system: host
+dispatch and kernel-launch costs dominate small-message halo exchange):
+
+  t_dispatch — host enqueue of one descriptor (CPU -> queue)   [us]
+  t_launch   — device kernel launch/teardown                   [us]
+  t_sync     — host<->device synchronization (hipStreamSync)   [us]
+  t_put(b)   — network put latency for b bytes                 [us]
+  t_signal   — tiny signal put                                 [us]
+
+Timeline model: the host enqueues every descriptor (t_dispatch each);
+the device executes kernels/signals in stream order; puts are offloaded
+(the device continues while the NIC moves bytes) and start no earlier
+than the completion of every dependency edge the schedule passes added.
+``host_orchestrated=True`` models the Fig. 9a baseline: the device waits
+for each dispatch and every epoch boundary (start/complete/wait) pays a
+full host round-trip.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+from repro.core.triggered import TriggeredProgram
 
 
 @dataclass
@@ -34,89 +47,109 @@ class CostModel:
         return self.put_base + self.put_per_kb * nbytes / 1024.0
 
 
-@dataclass
-class SimOp:
-    kind: str              # kernel | put | signal | sync
-    nbytes: int = 0
-    epoch: int = 0
+def simulate_program(prog: TriggeredProgram, cm: CostModel = None,
+                     host_orchestrated: bool = False) -> float:
+    """Critical-path completion time (us) of one scheduled program."""
+    cm = cm or CostModel()
+    merged = bool(prog.meta.get("merged", True))
+    t_host = 0.0                     # host (dispatch) timeline
+    t_dev = 0.0                      # device/NIC stream timeline
+    done: Dict[int, float] = {}      # put op_id -> completion time
 
+    def block(*extra):
+        nonlocal t_host, t_dev
+        t_host = max(t_host, t_dev, *extra) + cm.t_sync
+        t_dev = t_host
 
-def simulate(ops: List[SimOp], policy: str, resources: int,
-             cm: CostModel = CostModel(), merged: bool = True,
-             host_orchestrated: bool = False) -> float:
-    """Critical-path time (us) of a linear ST program.
-
-    host_orchestrated=True models the baseline (Fig. 9a): every op pays a
-    host dispatch, and every epoch boundary pays t_sync. Otherwise ops pay
-    one enqueue-time dispatch but execute back-to-back on the device
-    (GPU-SEC/TPU-sequencer in-order execution), and throttling decides when
-    a put may issue relative to completions.
-    """
-    t_host = 0.0            # host timeline
-    t_dev = 0.0             # device/NIC timeline
-    completions: List[float] = []   # put completion times
-    epoch_done: Dict[int, float] = {}
-    cur_epoch_comp: List[float] = []
-    last_epoch = 0
-
-    for op in ops:
+    for node in prog.nodes:
         t_host += cm.t_dispatch
         if host_orchestrated:
             t_dev = max(t_dev, t_host)
-        if op.kind == "kernel":
+        if node.kind == "kernel":
             t_dev += cm.t_launch
-        elif op.kind == "signal":
-            t_dev += cm.t_signal if merged else cm.t_launch + cm.t_signal
-        elif op.kind == "put":
+        elif node.kind == "signal":
+            # post signals: one fused launch vs a launch per neighbor
+            t_dev += cm.t_signal if node.fused else cm.t_launch + cm.t_signal
+        elif node.kind == "put":
             start = t_dev
-            # finite descriptor slots (paper §5.2): how a put may issue
-            # once the pool is exhausted differs per policy
-            if policy == "static" and len(completions) >= resources:
-                # weak sync inside the runtime: wait for ALL previously
-                # posted triggered ops to complete (§5.2.2)
-                start = max(start, max(completions))
-                completions.clear()
-            if policy == "adaptive" and len(completions) >= resources:
-                # recapture just the oldest slot (§5.2.3 sliding window)
-                start = max(start, completions[-resources])
-            if policy == "application" and len(completions) >= resources:
-                # host sync to reclaim everything (§5.2.1)
-                t_host = max(t_host, max(completions)) + cm.t_sync
-                start = max(start, t_host)
-                completions.clear()
-            end = start + cm.t_put(op.nbytes)
-            completions.append(end)
-            cur_epoch_comp.append(end)
-            t_dev = start  # puts are offloaded; device continues
-        elif op.kind == "sync":
-            t_host = max(t_host, t_dev,
-                         max(completions) if completions else 0.0) + cm.t_sync
+            for dep in node.deps:
+                start = max(start, done.get(dep, 0.0))
+            end = start + cm.t_put(node.nbytes)
+            comp = end
+            t_dev = start      # offloaded: the device stream continues
+            if node.chained is not None and node.chained.wire:
+                # §3.2 chained wire signal: its own tiny launch on the
+                # device stream plus a wire hop before completion lands
+                if host_orchestrated:
+                    t_host += cm.t_dispatch      # separate dispatch
+                t_dev += cm.t_launch + cm.t_signal
+                comp = end + cm.t_signal
+            done[node.op_id] = comp
+        elif node.kind == "start":
             if host_orchestrated:
-                t_dev = t_host
-    return max(t_host, t_dev, max(completions) if completions else 0.0)
+                block()
+        elif node.kind == "complete":
+            if merged:
+                # merged completion-signal kernel for the epoch
+                t_dev += cm.t_signal
+            if host_orchestrated:
+                block(max(done.values(), default=0.0))
+        elif node.kind == "wait":
+            t_dev += cm.t_launch
+            if host_orchestrated:
+                block()
+    return max(t_host, t_dev, max(done.values(), default=0.0))
 
 
-def faces_sim_ops(niter: int, nbytes_face: int, npeers: int = 26,
-                  merged: bool = True) -> List[SimOp]:
-    """The op sequence of the Faces inner loop for the simulator."""
-    ops: List[SimOp] = []
-    for it in range(niter):
-        ops.append(SimOp("kernel"))                      # increment
-        if merged:
-            ops.append(SimOp("kernel"))                  # pack (merged)
-            ops.append(SimOp("signal", epoch=it))        # merged post signals
-        else:
-            ops.extend(SimOp("kernel") for _ in range(npeers))
-            ops.extend(SimOp("signal", epoch=it) for _ in range(npeers))
-        ops.extend(SimOp("put", nbytes=nbytes_face, epoch=it)
-                   for _ in range(npeers))
-        if merged:
-            ops.append(SimOp("signal", epoch=it))        # merged completions
-            ops.append(SimOp("kernel"))                  # wait (merged)
-            ops.append(SimOp("kernel"))                  # unpack+compare
-        else:
-            ops.extend(SimOp("signal", epoch=it) for _ in range(npeers))
-            ops.extend(SimOp("kernel") for _ in range(npeers))  # waits
-            ops.extend(SimOp("kernel") for _ in range(npeers))  # unpacks
-    ops.append(SimOp("sync"))
-    return ops
+def simulate_pipeline(progs: Sequence[TriggeredProgram],
+                      cm: CostModel = None,
+                      host_orchestrated: bool = False) -> float:
+    """Total time of a host_sync-split program pipeline: each segment is
+    its own device program followed by a full host block (the final
+    synchronize() block included — matching STStream.synchronize)."""
+    cm = cm or CostModel()
+    return sum(simulate_program(p, cm, host_orchestrated) + cm.t_sync
+               for p in progs)
+
+
+# ---------------------------------------------------------------------------
+# convenience: device-free Faces programs for the cost model + tests
+# ---------------------------------------------------------------------------
+
+def faces_programs(niter: int, n=(8, 8, 8), grid=(2, 2, 2), *,
+                   throttle: str = "adaptive", resources: int = 16,
+                   merged: bool = True, ordered: bool = False,
+                   host_sync_every: int = 0) -> List[TriggeredProgram]:
+    """Lower+schedule a Faces program on a device-free stream — the same
+    builder and passes the executors use, minus a mesh. With
+    ``host_sync_every=k`` the program splits every k iterations
+    (application-level throttling, §5.2.1)."""
+    from repro.core import halo
+    from repro.core.stream import STStream
+
+    stream = STStream(None, ("x", "y", "z"), grid_shape=grid)
+    halo.build_faces_program(stream, n, niter, merged=merged,
+                             host_sync_every=host_sync_every)
+    return stream.scheduled_programs(throttle=throttle, resources=resources,
+                                     merged=merged, ordered=ordered)
+
+
+def simulate_faces(niter: int, n=(8, 8, 8), *, policy: str = "adaptive",
+                   resources: int = 16, merged: bool = True,
+                   ordered: bool = False, host_orchestrated: bool = False,
+                   cm: CostModel = None) -> float:
+    """Derived critical-path time of the Faces inner loop under a policy.
+
+    ``policy="application"`` (§5.2.1) splits the program every iteration
+    — the finest sync the app can insert (an access epoch's puts are
+    indivisible) — and keeps the runtime's static weak-sync edges: when
+    an epoch alone exhausts the R slots, the pool must still be
+    reclaimed before the next put fires. Application's schedule thus
+    contains static's (which contains adaptive's), so the Fig. 13
+    ordering adaptive <= static <= application holds structurally."""
+    host_sync_every = 1 if policy == "application" else 0
+    throttle = "static" if policy == "application" else policy
+    progs = faces_programs(niter, n, throttle=throttle, resources=resources,
+                           merged=merged, ordered=ordered,
+                           host_sync_every=host_sync_every)
+    return simulate_pipeline(progs, cm, host_orchestrated)

@@ -1,45 +1,179 @@
-"""Triggered-operation model (paper §3).
+"""Triggered-operation IR (paper §3) — the live program representation.
 
 A NIC triggered op has (trigger_counter, threshold, completion_counter):
 it executes when trigger_counter reaches threshold, and bumps its
 completion counter when done. Completion observation is CHAINED (§3.2):
-the payload's completion counter is the trigger counter of a signal op
-that increments a device-memory location a wait kernel polls.
+the payload put carries a chained signal descriptor that increments a
+device-memory counter slot a wait kernel polls.
+
+This module is the first-class program representation of the compiler
+pipeline:
+
+    STStream op queue --lower--> TriggeredProgram --schedule--> same
+    TriggeredProgram with dependency edges --emit--> one of three
+    backends (compiled ST / host-orchestrated / cost simulator).
+
+  * stage 1: :mod:`repro.core.lower` builds the descriptor DAG,
+  * stage 2: :mod:`repro.core.schedule` passes add throttling /
+    ordering edges and fuse signal kernels,
+  * stage 3: :mod:`repro.core.backends` (executors) and
+    :mod:`repro.core.throttle` (simulator) consume the scheduled DAG.
 
 TPU adaptation: counters are named slots in a device-resident counter
-buffer; the "MMIO doorbell" is a dataflow edge (or a Pallas semaphore in
-the kernels/ layer). Descriptors below are TRACE-TIME objects — enqueued by
-the host immediately, lowered into the single compiled program that the
-TPU executes without further host involvement (the offload property).
+buffer ("win.post_sig[3]"); the "MMIO doorbell" is a dataflow edge (an
+optimization_barrier in the compiled backend). Descriptors are
+TRACE-TIME objects — enqueued by the host immediately, lowered into the
+single compiled program that the device executes without further host
+involvement (the offload property).
 
-Resources are finite (§5.2): `ResourcePool` models the NIC's triggered-op
-slots; throttling policies in throttle.py decide how slot reuse constrains
-the schedule.
+Resources are finite (§5.2): `ResourcePool` models the NIC's
+triggered-op slots; the throttling passes in schedule.py decide how slot
+reuse constrains the schedule. This module stays pure Python — no jax
+imports — so programs can be built, transformed, and simulated off-device.
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Dict, List, Optional, Tuple
 
 _ids = itertools.count()
 
 
+def fresh_id() -> int:
+    return next(_ids)
+
+
 @dataclass
 class TriggeredOp:
-    """A deferred put (payload) or signal descriptor."""
-    kind: str                      # "put" | "signal"
-    window: str
-    src: Optional[str] = None      # staging buffer name (puts)
-    dst: Optional[str] = None      # destination buffer name on target
-    direction: Any = None          # neighbor offset (halo) or perm pairs
+    """One descriptor node of the program DAG.
+
+    kind:
+      * "kernel"   — compute launch (fn/reads/writes)
+      * "signal"   — tiny counter-bump put (role "post" or "completion")
+      * "start"    — origin-side access-epoch open: snapshots the post
+                     counter that triggers this epoch's puts
+      * "put"      — payload put descriptor; fires its chained completion
+                     signal (§3.2) when the payload lands
+      * "complete" — access-epoch close marker (host backend blocks here)
+      * "wait"     — target-side wait kernel polling a completion counter
+    """
+    kind: str
+    window: str = ""
+    label: str = ""
+    # kernel payload
+    fn: Any = None
+    reads: Tuple[str, ...] = ()
+    writes: Tuple[str, ...] = ()
+    # put payload
+    src: Optional[str] = None
+    dst: Optional[str] = None
+    direction: Any = None
     nbytes: int = 0
     epoch: int = 0
-    trigger_counter: str = ""      # counter slot name
+    trigger_counter: str = ""       # named counter slot arming this op
     threshold: int = 1
-    completion_counter: str = ""   # counter slot name bumped on completion
-    op_id: int = field(default_factory=lambda: next(_ids))
-    chained: Optional["TriggeredOp"] = None  # §3.2 chaining
+    completion_counter: str = ""    # named counter slot bumped on completion
+    # signal payload
+    role: str = ""                  # "post" | "completion"
+    slot: int = -1                  # target counter slot index
+    slots: Tuple = ()               # fused signal: ((slot, direction), ...)
+    fused: bool = False             # merged-signal-kernel (paper §5.4)
+    wire: bool = True               # True: crosses the wire (second tiny
+    #                                 put); False: local bump tied to the
+    #                                 payload's arrival
+    counter: str = ""               # counter buffer this signal/wait targets
+    # schedule edges (op_ids of puts whose completion must precede firing)
+    deps: Tuple[int, ...] = ()
+    chained: Optional["TriggeredOp"] = None   # §3.2 chained signal
+    op_id: int = field(default_factory=fresh_id)
+
+    def structural_key(self, idx: Optional[Dict[int, int]] = None,
+                       with_deps: bool = True):
+        """Cache key independent of global op_id numbering: deps are
+        normalized through `idx` (op_id -> position in program)."""
+        deps = ()
+        if with_deps and self.deps:
+            deps = tuple(sorted((idx or {}).get(d, -1) for d in self.deps))
+        chained = (self.chained.structural_key(idx, with_deps=False)
+                   if self.chained is not None else None)
+        return (self.kind, self.window, self.label, id(self.fn),
+                self.reads, self.writes, self.src, self.dst,
+                tuple(self.direction) if self.direction else None,
+                self.role, self.slot, tuple(self.slots), self.fused,
+                self.wire, self.counter, deps, chained)
+
+
+@dataclass
+class TriggeredProgram:
+    """A lowered (and, after schedule passes, scheduled) descriptor DAG.
+
+    `nodes` is the device emission order; `deps` edges on put nodes plus
+    the §3.2 `chained` links make it a DAG. `meta` carries schedule-pass
+    results (policy, resource high-water mark, merged flag)."""
+    nodes: List[TriggeredOp] = field(default_factory=list)
+    windows: Dict[str, Any] = field(default_factory=dict)
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def puts(self) -> List[TriggeredOp]:
+        return [n for n in self.nodes if n.kind == "put"]
+
+    def epochs(self) -> int:
+        return sum(1 for n in self.nodes if n.kind == "complete")
+
+    def key(self):
+        idx = {n.op_id: i for i, n in enumerate(self.nodes)}
+        return tuple(n.structural_key(idx) for n in self.nodes)
+
+    # -- descriptor statistics (surfaced via launch/report + benchmarks) ----
+    def critical_path_depth(self) -> int:
+        """Longest chain of descriptors: kernels/signals/waits execute
+        in-order on the device stream; puts are offloaded and serialize
+        only on their dependency edges; a wait joins the completions of
+        its window's puts; a chained signal adds one hop after its put."""
+        depth: Dict[int, int] = {}
+        win_put_depth: Dict[str, int] = {}
+        stream_d = 0
+        maxd = 0
+        for n in self.nodes:
+            if n.kind == "put":
+                d = stream_d + 1
+                for dep in n.deps:
+                    d = max(d, depth.get(dep, 0) + 1)
+                if n.chained is not None:
+                    d += 1
+                depth[n.op_id] = d
+                win_put_depth[n.window] = max(
+                    win_put_depth.get(n.window, 0), d)
+            elif n.kind == "wait":
+                stream_d = max(stream_d + 1,
+                               win_put_depth.get(n.window, 0) + 1)
+            elif n.kind in ("kernel", "signal"):
+                stream_d += 1
+            # "start"/"complete" are markers: no device work
+            maxd = max(maxd, stream_d,
+                       depth.get(n.op_id, 0) if n.kind == "put" else 0)
+        return maxd
+
+    def stats(self) -> Dict[str, Any]:
+        puts = self.puts()
+        epochs = max(self.epochs(), 1)
+        signals = sum(1 for n in self.nodes if n.kind == "signal")
+        signals += sum(1 for n in puts if n.chained is not None)
+        return {
+            "descriptors": len(self.nodes),
+            "puts": len(puts),
+            "epochs": self.epochs(),
+            "puts_per_epoch": len(puts) / epochs,
+            "bytes_per_epoch": sum(p.nbytes for p in puts) / epochs,
+            "signals": signals,
+            "kernels": sum(1 for n in self.nodes if n.kind == "kernel"),
+            "dep_edges": sum(len(n.deps) for n in puts),
+            "resource_high_water": self.meta.get("resource_high_water", 0),
+            "critical_path_depth": self.critical_path_depth(),
+            "throttle": self.meta.get("throttle", "none"),
+            "merged": self.meta.get("merged", True),
+        }
 
 
 @dataclass
@@ -47,9 +181,8 @@ class ResourcePool:
     """Finite triggered-op descriptor slots (paper §5.2).
 
     `acquire` returns the op_id whose completion must precede reuse of the
-    slot (None while slots are free) — the throttling policy turns that
-    into a schedule dependency.
-    """
+    slot (None while slots are free) — the throttling pass turns that
+    into a schedule dependency edge."""
     capacity: int
     in_flight: list = field(default_factory=list)
     high_water: int = 0

@@ -5,22 +5,21 @@ device state. Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
 Multi-pod: ("pod", "data", "model") = (2, 16, 16) = 512 chips; the "pod"
 axis carries pure data parallelism (gradient all-reduce crosses the
 inter-pod links once per step).
+
+Mesh creation goes through repro.core.compat so the jax.sharding.AxisType
+/ jax.make_mesh API drift across JAX releases is handled in one place.
 """
 from __future__ import annotations
 
-import jax
+from repro.core.compat import make_mesh as _compat_make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _compat_make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests/benchmarks (e.g. (2,2,2) px/py/pz Faces)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _compat_make_mesh(tuple(shape), tuple(axes))

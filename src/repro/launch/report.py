@@ -1,6 +1,12 @@
-"""Generate EXPERIMENTS.md tables from results/dryrun JSON records.
+"""Generate EXPERIMENTS.md tables from results JSON records.
 
   python -m repro.launch.report --dir results/dryrun --md
+  python -m repro.launch.report --what st --dir results/st
+
+The ``st`` table reads the records ``benchmarks/faces_worker.py
+--json-dir`` writes: per-program triggered-op descriptor stats
+(puts/epoch, resource high-water mark, critical-path depth) next to the
+measured and derived times.
 """
 from __future__ import annotations
 
@@ -64,14 +70,36 @@ def roofline_table(recs, mesh="16x16"):
     return "\n".join(rows)
 
 
+def st_stats_table(recs):
+    """Descriptor-DAG stats per Faces benchmark run (faces_worker
+    --json-dir records)."""
+    rows = ["| name | mode | throttle | us/iter | derived | puts/epoch | "
+            "hwm | crit depth | dep edges |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if "stats" not in r:
+            continue
+        s = r["stats"]
+        rows.append(
+            f"| {r['name']} | {r['mode']} | {r.get('throttle', '-')} | "
+            f"{r['us_per_iter']:.1f} | {r['derived_us_per_iter']:.2f} | "
+            f"{s['puts_per_epoch']:.0f} | {s['resource_high_water']} | "
+            f"{s['critical_path_depth']} | {s['dep_edges']} |")
+    return "\n".join(rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--mesh", default=None)
     ap.add_argument("--what", default="both",
-                    choices=["both", "dryrun", "roofline"])
+                    choices=["both", "dryrun", "roofline", "st"])
     args = ap.parse_args()
     recs = load_records(args.dir)
+    if args.what == "st":
+        print("### ST descriptor-DAG stats\n")
+        print(st_stats_table(recs))
+        return
     if args.what in ("both", "dryrun"):
         print("### Dry-run records\n")
         print(dryrun_table(recs, args.mesh))

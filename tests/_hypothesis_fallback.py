@@ -1,0 +1,67 @@
+"""Example-based fallback for the hypothesis API surface the tests use.
+
+When hypothesis is installed the test modules import it directly; when it
+is absent they fall back to this shim and every ``@given`` property test
+degrades to a small deterministic sweep of boundary + midpoint examples.
+Only the subset of the API used in this repo is provided
+(``given``/``settings`` decorators, ``strategies.integers/floats/
+sampled_from``).
+"""
+from __future__ import annotations
+
+import math
+
+
+class _Strategy:
+    def __init__(self, examples):
+        self.examples = list(examples)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        mid = (min_value + max_value) // 2
+        vals = {min_value, mid, max_value}
+        return _Strategy(sorted(vals))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        vals = [min_value, max_value]
+        if min_value > 0 and max_value > 0:
+            vals.append(math.sqrt(min_value * max_value))
+        else:
+            vals.append((min_value + max_value) / 2.0)
+        return _Strategy(vals)
+
+    @staticmethod
+    def sampled_from(seq):
+        return _Strategy(seq)
+
+
+st = strategies
+
+
+def settings(**_kwargs):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(**strategy_kwargs):
+    """Run the test once per example row; row t takes example (t + k) of
+    argument k so the sweep varies every argument, not just the first."""
+    names = list(strategy_kwargs)
+    lists = [strategy_kwargs[n].examples for n in names]
+
+    def deco(fn):
+        def runner():
+            rounds = max(len(ex) for ex in lists)
+            for t in range(rounds):
+                kwargs = {n: lists[k][(t + k) % len(lists[k])]
+                          for k, n in enumerate(names)}
+                fn(**kwargs)
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+    return deco

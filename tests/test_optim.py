@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # degrade to example-based sweeps
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.models.params import ParamSpec, init_params
