@@ -1,14 +1,21 @@
-"""Faces benchmark worker (runs in its own process so it can claim fake
-devices). Prints one CSV line: name,us_per_call,derived — plus a
-"#stats" comment line with the scheduled program's descriptor counts.
+"""ST benchmark worker (runs in its own process so it can claim fake
+devices). Originally Faces-only, now pattern-agnostic: ``--pattern``
+selects any registered ST program builder (faces / ring / a2a) and the
+whole worker body — build, schedule, execute, simulate, stats — is
+shared. Prints one CSV line: name,us_per_call,derived — plus a "#stats"
+comment line with the scheduled program's descriptor counts.
 
-  us_per_call — measured wall-clock per Faces inner-loop iteration on this
+  us_per_call — measured wall-clock per inner-loop iteration on this
                 CPU container (host-dispatch overheads are real; network
                 latencies are not).
   derived     — critical-path time from the calibrated schedule simulator
                 (core/throttle.py) walking the SAME scheduled descriptor
                 DAG the executor emits, with paper-like cost constants —
                 the number to compare against the paper's relative claims.
+
+``BENCH_INJECT_FAIL=1`` makes the worker exit nonzero immediately — the
+hook the CI bench-smoke job uses to prove the harness gates on worker
+failures instead of swallowing them.
 """
 import argparse
 import json
@@ -16,10 +23,35 @@ import os
 import sys
 
 
+def build_kwargs(args, ndev):
+    """Per-pattern size mapping from the shared --block knob."""
+    if args.pattern == "faces":
+        import jax.numpy as jnp
+        overlap = ((lambda a: a @ a), "overlapbuf") if args.overlap else None
+        extra = {"overlapbuf": ((64, 64), jnp.float32)} if args.overlap \
+            else None
+        return dict(n=(args.block,) * 3, overlap_kernel=overlap,
+                    extra_buffers=extra)
+    if args.pattern == "ring":
+        return dict(batch=1, seq_per_rank=args.block, heads=2, head_dim=8)
+    if args.pattern == "a2a":
+        return dict(batch=1, seq=args.block, d_model=16, expert_ff=16,
+                    experts=2 * ndev, top_k=2)
+    raise ValueError(f"no size mapping for pattern {args.pattern!r}")
+
+
 def main():
+    inject = os.environ.get("BENCH_INJECT_FAIL", "").strip().lower()
+    if inject not in ("", "0", "false", "no"):
+        sys.exit("injected worker failure (BENCH_INJECT_FAIL is set)")
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--grid", default="2,2,2")
-    ap.add_argument("--block", type=int, default=8)
+    ap.add_argument("--pattern", default="faces",
+                    choices=["faces", "ring", "a2a"])
+    ap.add_argument("--grid", default="2,2,2",
+                    help="process grid, e.g. 2,2,2 (faces) or 4 (ring/a2a)")
+    ap.add_argument("--block", type=int, default=8,
+                    help="faces: block edge; ring: seq per rank; a2a: seq")
     ap.add_argument("--niter", type=int, default=10)
     ap.add_argument("--mode", default="st", choices=["st", "host"])
     ap.add_argument("--throttle", default="adaptive")
@@ -27,7 +59,8 @@ def main():
     ap.add_argument("--ordered", type=int, default=0,
                     help="P2P message-matching serialization")
     ap.add_argument("--overlap", type=int, default=0,
-                    help="enqueue an independent compute kernel per iter")
+                    help="enqueue an independent compute kernel per iter "
+                         "(faces only)")
     ap.add_argument("--resources", type=int, default=16)
     ap.add_argument("--name", default=None)
     ap.add_argument("--json-dir", default=None,
@@ -43,23 +76,19 @@ def main():
         f"--xla_force_host_platform_device_count={ndev}")
 
     import time
-    import jax
-    import jax.numpy as jnp
-    from repro.core import STStream, halo
+    from repro.core import STStream, get_pattern
     from repro.core.throttle import CostModel, simulate_pipeline
     from repro.launch.mesh import make_mesh
 
-    N = (args.block,) * 3
-    mesh = make_mesh(grid, ("x", "y", "z"))
+    pat = get_pattern(args.pattern)
+    if len(grid) != len(pat.grid_axes):
+        raise SystemExit(f"pattern {args.pattern!r} wants a "
+                         f"{len(pat.grid_axes)}-d grid, got {args.grid!r}")
+    mesh = make_mesh(grid, pat.grid_axes)
 
-    stream = STStream(mesh, ("x", "y", "z"))
-    overlap_kernel = ((lambda a: a @ a), "overlapbuf") if args.overlap \
-        else None
-    extra = {"overlapbuf": ((64, 64), jnp.float32)} if args.overlap else None
-    halo.build_faces_program(stream, N, args.niter,
-                             merged=bool(args.merged),
-                             extra_buffers=extra,
-                             overlap_kernel=overlap_kernel)
+    stream = STStream(mesh, pat.grid_axes)
+    pat.build(stream, args.niter, merged=bool(args.merged),
+              **build_kwargs(args, ndev))
     state = stream.allocate()
 
     throttle = args.throttle
@@ -98,18 +127,19 @@ def main():
 
     stats = progs[0].stats()
     stats["segments"] = len(progs)
-    name = args.name or (f"faces_{args.mode}_{throttle}"
+    name = args.name or (f"{args.pattern}_{args.mode}_{throttle}"
                          f"_m{int(merged)}_o{args.ordered}_{ndev}r")
     print(f"{name},{us_per_iter:.1f},{derived:.2f}")
-    print(f"#stats {name} puts_per_epoch={stats['puts_per_epoch']:.0f} "
+    print(f"#stats {name} pattern={stats['pattern']} "
+          f"puts_per_epoch={stats['puts_per_epoch']:.0f} "
           f"resource_high_water={stats['resource_high_water']} "
           f"critical_path_depth={stats['critical_path_depth']} "
           f"descriptors={stats['descriptors']} "
           f"dep_edges={stats['dep_edges']}")
     if args.json_dir:
         os.makedirs(args.json_dir, exist_ok=True)
-        rec = dict(name=name, mode=args.mode, grid=list(grid),
-                   block=args.block, niter=args.niter,
+        rec = dict(name=name, pattern=args.pattern, mode=args.mode,
+                   grid=list(grid), block=args.block, niter=args.niter,
                    us_per_iter=us_per_iter, derived_us_per_iter=derived,
                    **sched_opts, stats=stats)
         with open(os.path.join(args.json_dir, f"{name}.json"), "w") as f:

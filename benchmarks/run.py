@@ -1,9 +1,10 @@
-"""Benchmark harness — one section per paper figure. Prints
-``name,us_per_call,derived`` CSV (derived = critical path per iteration
-in us from the calibrated simulator walking the scheduled triggered-op
-descriptor DAG for Faces benches; roofline fraction for dry-run rows;
-tokens/s for throughput rows), plus ``#stats`` lines with per-program
-descriptor counts (puts/epoch, resource high-water, critical-path depth).
+"""Benchmark harness — one section per paper figure plus the non-halo
+ST transports. Prints ``name,us_per_call,derived`` CSV (derived =
+critical path per iteration in us from the calibrated simulator walking
+the scheduled triggered-op descriptor DAG for ST benches; roofline
+fraction for dry-run rows; tokens/s for throughput rows), plus
+``#stats`` lines with per-program descriptor counts (puts/epoch,
+resource high-water, critical-path depth).
 
 Sections:
   fig12  Faces overall: ST vs host-orchestrated active RMA (8 & 64 ranks)
@@ -11,8 +12,17 @@ Sections:
   fig14  merged vs independent kernels (8 & 64 ranks)
   fig15  overlapping compute kernel
   fig16_17 P2P-ordered vs RMA vs ST, intra (8r) and multi (64r)
+  ring   ST-lowered ring-attention rotation vs host baseline (4 ranks)
+  a2a    expert-parallel MoE aggregated-put combine vs host baseline
   roofline  per (arch x shape x mesh) terms from results/dryrun
   throughput  tiny-config train tokens/s
+
+Worker failures are COUNTED and the harness exits nonzero (CI gates on
+this). ``--json PATH`` writes every parsed row + failures + invariant
+checks as one JSON record; ``--check-invariants`` asserts the Fig. 13
+structural ordering adaptive <= static <= application on derived costs
+for every ST pattern. ``BENCH_SMOKE=1`` keeps only the small-grid
+configs (CI), ``BENCH_NITER`` overrides iterations per worker.
 """
 import json
 import os
@@ -24,66 +34,121 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 WORKER = os.path.join(ROOT, "benchmarks", "faces_worker.py")
 
 
-def _worker(**kw):
+def env_flag(name):
+    """"", "0", "false", "no" (any case) are OFF; anything else is ON."""
+    return os.environ.get(name, "").strip().lower() \
+        not in ("", "0", "false", "no")
+
+
+SMOKE = env_flag("BENCH_SMOKE")
+
+RESULTS = []       # parsed CSV rows across all sections
+FAILURES = []      # worker invocations that exited nonzero or hung
+
+
+def _worker(section="", **kw):
     kw.setdefault("niter", os.environ.get("BENCH_NITER", "10"))
     cmd = [sys.executable, WORKER]
     for k, v in kw.items():
         cmd += [f"--{k}", str(v)]
     env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
-    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
-                       timeout=2400)
-    if r.returncode != 0:
-        print(f"# WORKER FAILED {kw}: {r.stderr[-400:]}", flush=True)
-        return
+    try:
+        r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                           timeout=2400)
+        returncode, stderr = r.returncode, r.stderr
+    except subprocess.TimeoutExpired as e:
+        r, returncode = None, -1
+        stderr = f"timeout after {e.timeout}s"
+    if returncode != 0:
+        print(f"# WORKER FAILED {kw}: {stderr[-400:]}", flush=True)
+        FAILURES.append({"section": section,
+                         "args": {k: str(v) for k, v in kw.items()},
+                         "returncode": returncode,
+                         "stderr": stderr[-400:]})
+        return False
     for line in r.stdout.strip().splitlines():
-        if "," in line or line.startswith("#stats"):
+        if line.startswith("#stats"):
             print(line, flush=True)
+        elif "," in line:
+            print(line, flush=True)
+            parts = line.split(",")
+            if len(parts) >= 3:
+                try:
+                    RESULTS.append({"section": section, "name": parts[0],
+                                    "us_per_call": float(parts[1]),
+                                    "derived": float(parts[2])})
+                except ValueError:
+                    pass
+    return True
+
+
+def _grids(pairs):
+    """Under BENCH_SMOKE keep only the smallest grid config."""
+    return pairs[:1] if SMOKE else pairs
 
 
 def fig12():
     print("# fig12: Faces overall — ST vs host-orchestrated active RMA")
-    for grid, tag in (("2,2,2", "8r"), ("4,4,4", "64r")):
-        _worker(grid=grid, mode="host", throttle="none", merged=1,
+    for grid, tag in _grids([("2,2,2", "8r"), ("4,4,4", "64r")]):
+        _worker("fig12", grid=grid, mode="host", throttle="none", merged=1,
                 name=f"fig12_activeRMA_{tag}")
-        _worker(grid=grid, mode="st", throttle="adaptive", merged=1,
+        _worker("fig12", grid=grid, mode="st", throttle="adaptive", merged=1,
                 name=f"fig12_stRMA_{tag}")
 
 
 def fig13():
     print("# fig13: throttling algorithms (64 ranks, resources=16)")
     for thr in ("adaptive", "static"):
-        _worker(grid="4,4,4", mode="st", throttle=thr, resources=16,
+        _worker("fig13", grid="4,4,4", mode="st", throttle=thr, resources=16,
                 name=f"fig13_{thr}_64r")
     # application-level throttling == host-orchestrated resource reclaim
-    _worker(grid="4,4,4", mode="host", throttle="none", resources=16,
-            name="fig13_application_64r")
+    _worker("fig13", grid="4,4,4", mode="host", throttle="none",
+            resources=16, name="fig13_application_64r")
 
 
 def fig14():
     print("# fig14: merged vs independent kernels")
-    for grid, tag in (("2,2,2", "8r"), ("4,4,4", "64r")):
+    for grid, tag in _grids([("2,2,2", "8r"), ("4,4,4", "64r")]):
         for m in (1, 0):
-            _worker(grid=grid, mode="st", throttle="adaptive", merged=m,
-                    name=f"fig14_{'merged' if m else 'indep'}_{tag}")
+            _worker("fig14", grid=grid, mode="st", throttle="adaptive",
+                    merged=m, name=f"fig14_{'merged' if m else 'indep'}_{tag}")
 
 
 def fig15():
     print("# fig15: overlapping compute kernel (64 ranks)")
     for mode in ("st", "host"):
-        _worker(grid="4,4,4", mode=mode, throttle="adaptive", merged=1,
-                overlap=1, name=f"fig15_{mode}_overlap_64r")
+        _worker("fig15", grid="4,4,4", mode=mode, throttle="adaptive",
+                merged=1, overlap=1, name=f"fig15_{mode}_overlap_64r")
 
 
 def fig16_17():
     print("# fig16/17: traditional P2P (ordered) vs active RMA vs ST")
-    for grid, fig in (("2,2,2", "fig16"), ("4,4,4", "fig17")):
+    for grid, fig in _grids([("2,2,2", "fig16"), ("4,4,4", "fig17")]):
         tag = "8r" if fig == "fig16" else "64r"
-        _worker(grid=grid, mode="host", throttle="none", merged=1, ordered=1,
-                name=f"{fig}_p2p_{tag}")
-        _worker(grid=grid, mode="host", throttle="none", merged=1,
+        _worker(fig, grid=grid, mode="host", throttle="none", merged=1,
+                ordered=1, name=f"{fig}_p2p_{tag}")
+        _worker(fig, grid=grid, mode="host", throttle="none", merged=1,
                 name=f"{fig}_activeRMA_{tag}")
-        _worker(grid=grid, mode="st", throttle="adaptive", merged=1,
+        _worker(fig, grid=grid, mode="st", throttle="adaptive", merged=1,
                 name=f"{fig}_stRMA_{tag}")
+
+
+def ring():
+    print("# ring: ST-lowered ring-attention KV rotation (4 ranks)")
+    _worker("ring", pattern="ring", grid="4", block=16, mode="host",
+            throttle="none", merged=1, name="ring_activeRMA_4r")
+    for thr in ("adaptive", "static"):
+        _worker("ring", pattern="ring", grid="4", block=16, mode="st",
+                throttle=thr, resources=8, name=f"ring_st_{thr}_4r")
+
+
+def a2a():
+    print("# a2a: expert-parallel MoE aggregated-put combine (4 ranks)")
+    _worker("a2a", pattern="a2a", grid="4", block=16, mode="host",
+            throttle="none", merged=1, name="a2a_activeRMA_4r")
+    for thr in ("adaptive", "static"):
+        _worker("a2a", pattern="a2a", grid="4", block=16, mode="st",
+                throttle=thr, resources=8, name=f"a2a_st_{thr}_4r")
 
 
 def roofline():
@@ -140,9 +205,34 @@ def throughput():
     print(f"throughput_train_tiny,{dt*1e6:.0f},{toks/dt:.0f}")
 
 
+def check_invariants():
+    """Fig. 13 structural ordering on DERIVED costs, for EVERY registered
+    pattern, from a device-free lower+schedule+simulate (no fake devices
+    needed)."""
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.core.patterns import available_patterns, simulate_pattern
+
+    size_overrides = {"faces": dict(n=(4, 4, 4))}
+    eps = 1e-9
+    checks = []
+    print("# invariants: derived adaptive <= static <= application")
+    for pat in available_patterns():
+        kw = size_overrides.get(pat, {})
+        t = {pol: simulate_pattern(pat, 4, policy=pol, resources=8, **kw)
+             for pol in ("adaptive", "static", "application")}
+        ok = (t["adaptive"] <= t["static"] + eps
+              and t["static"] <= t["application"] + eps)
+        checks.append(dict(pattern=pat, ok=ok, **t))
+        print(f"# invariant {pat}: adaptive={t['adaptive']:.2f} "
+              f"static={t['static']:.2f} application={t['application']:.2f}"
+              f" -> {'OK' if ok else 'VIOLATED'}")
+    return checks
+
+
 SECTIONS = {
     "fig12": fig12, "fig13": fig13, "fig14": fig14, "fig15": fig15,
-    "fig16_17": fig16_17, "roofline": roofline, "throughput": throughput,
+    "fig16_17": fig16_17, "ring": ring, "a2a": a2a,
+    "roofline": roofline, "throughput": throughput,
 }
 
 
@@ -151,11 +241,38 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated section names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows/failures/invariants as one JSON file")
+    ap.add_argument("--check-invariants", action="store_true",
+                    help="assert adaptive <= static <= application on "
+                         "derived costs for every ST pattern")
     args = ap.parse_args()
     names = (args.only.split(",") if args.only else list(SECTIONS))
     print("name,us_per_call,derived")
     for n in names:
         SECTIONS[n]()
+    checks = check_invariants() if args.check_invariants else []
+    violated = [c["pattern"] for c in checks if not c["ok"]]
+
+    if args.json:
+        os.makedirs(os.path.dirname(os.path.abspath(args.json)),
+                    exist_ok=True)
+        rec = {"sections": names, "rows": RESULTS, "failures": FAILURES,
+               "invariants": checks,
+               "env": {"niter": os.environ.get("BENCH_NITER", "10"),
+                       "smoke": SMOKE}}
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"# wrote {args.json} ({len(RESULTS)} rows, "
+              f"{len(FAILURES)} failures)")
+
+    if FAILURES:
+        print(f"# {len(FAILURES)} worker(s) FAILED", file=sys.stderr)
+    if violated:
+        print(f"# invariant VIOLATED for: {', '.join(violated)}",
+              file=sys.stderr)
+    if FAILURES or violated:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

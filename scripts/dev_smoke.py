@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
-from repro.models import (model_specs, cache_specs, forward, init_params,
+from repro.models import (model_specs, cache_specs, forward,
                           logits_from_hidden, lm_loss, param_count)
 from repro.models.params import init_params as init_p
 from repro.sharding.rules import make_rules

@@ -8,7 +8,7 @@ derived with ``ModelConfig.reduced()``.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence
 
 # ---------------------------------------------------------------------------

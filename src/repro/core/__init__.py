@@ -12,13 +12,19 @@ from repro.core.window import STWindow
 from repro.core.triggered import (ResourcePool, TriggeredOp,
                                   TriggeredProgram)
 from repro.core.lower import lower_segment, split_segments
+from repro.core.patterns import (PatternTopology, STPattern,
+                                 available_patterns, build_pattern,
+                                 get_pattern, pattern_programs,
+                                 register_pattern, simulate_pattern)
 from repro.core.schedule import schedule
 from repro.core.throttle import (CostModel, faces_programs, simulate_faces,
                                  simulate_pipeline, simulate_program)
 from repro.core import halo
 
 __all__ = ["STStream", "STWindow", "TriggeredOp", "TriggeredProgram",
-           "ResourcePool", "CostModel", "counters_expected",
-           "lower_segment", "split_segments", "schedule",
-           "simulate_program", "simulate_pipeline", "simulate_faces",
-           "faces_programs", "halo"]
+           "ResourcePool", "CostModel", "PatternTopology", "STPattern",
+           "counters_expected", "lower_segment", "split_segments",
+           "schedule", "register_pattern", "get_pattern",
+           "available_patterns", "build_pattern", "pattern_programs",
+           "simulate_pattern", "simulate_program", "simulate_pipeline",
+           "simulate_faces", "faces_programs", "halo"]

@@ -13,15 +13,23 @@ dispatch compute deleted.
 
 Faithful ST framing: the per-expert gathers/scatters are the "merged
 kernels" and the single psum is the aggregated put of the access epoch.
+``build_moe_a2a_program`` makes that framing LITERAL: the combine is
+lowered onto the triggered-op DAG as an aggregated-put access epoch —
+each shard's partial output is a payload put to every peer shift and the
+combine kernel sums the received partials — so the schedule passes and
+all three backends apply to expert parallelism unchanged.
+``moe_a2a_st`` runs it and matches :func:`moe_a2a` numerically.
 """
 from __future__ import annotations
 
+from types import SimpleNamespace
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.compat import shard_map
-from repro.models.moe import _capacity, _router, _shared
+from repro.core.patterns import register_pattern, shifts_topology
+from repro.models.moe import _capacity, _shared
 
 
 def moe_a2a(cfg, params, x, rules):
@@ -129,5 +137,156 @@ def _moe_local(cfg, params, x, rules, n_shards, shard_id):
                           params["w_down"].astype(dt), shard_id,
                           cfg.moe.num_experts // n_shards)
     if cfg.moe.num_shared:
+        out = out + _shared(params, x, dt, rules)
+    return out, aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# ST program: the combine as an aggregated-put access epoch
+# ---------------------------------------------------------------------------
+
+def _tiny_moe_cfg(experts, top_k, expert_ff):
+    """cfg duck-type for the self-contained (benchmark / device-free)
+    path; ``moe_a2a_st`` passes a real ModelConfig instead."""
+    return SimpleNamespace(moe=SimpleNamespace(
+        num_experts=experts, top_k=top_k, expert_ff=expert_ff,
+        router_aux_coef=0.01, capacity_factor=1.25, num_shared=0))
+
+
+def make_moe_a2a_kernels(cfg, axis, n_shards):
+    """Kernel closures: the local gather/expert/scatter compute producing
+    this shard's partial, and the combine summing all received partials
+    (the psum replacement). Buffers carry the shard_map rank dim R=1."""
+    e_l = cfg.moe.num_experts // n_shards
+
+    def moe_shard(x, router, wg, wu, wd):
+        sid = jax.lax.axis_index(axis)
+        out, aux = _moe_shard(cfg, x[0], router[0], wg[0], wu[0], wd[0],
+                              sid, e_l)
+        return out[None], aux.reshape(1, 1)
+
+    def combine(partial, paux, *recvs):
+        # recvs = peer partials then peer aux partials
+        k = len(recvs) // 2
+        out = partial
+        for r in recvs[:k]:
+            out = out + r
+        aux = paux
+        for r in recvs[k:]:
+            aux = aux + r
+        return out, aux / n_shards
+
+    return {"moe_shard": moe_shard, "combine": combine}
+
+
+def create_a2a_window(stream, *, batch, seq, d_model, expert_ff, e_l,
+                      dtype=jnp.float32, name="a2a"):
+    """Window with the (replicated) token block, this shard's expert
+    weights, the partial-output/aux buffers, and one recv buffer per
+    peer shift of the aggregated-put combine."""
+    n = stream.grid_shape[0]
+    tok = (batch, seq, d_model)
+    bufs = {"x": (tok, dtype),
+            "router": ((d_model, e_l * n), dtype),
+            "wg": ((e_l, d_model, expert_ff), dtype),
+            "wu": ((e_l, d_model, expert_ff), dtype),
+            "wd": ((e_l, expert_ff, d_model), dtype),
+            "partial": (tok, dtype), "paux": ((1,), jnp.float32),
+            "out": (tok, dtype), "aux": ((1,), jnp.float32)}
+    for k in range(1, n):
+        bufs[f"recvp{k}"] = (tok, dtype)
+        bufs[f"recva{k}"] = ((1,), jnp.float32)
+    topo = shifts_topology(n, stream.grid_axes)
+    return stream.create_window(name, bufs, list(topo.group), topology=topo)
+
+
+@register_pattern("a2a", grid_axes=("model",), default_grid=(2,),
+                  doc="expert-parallel MoE combine as aggregated puts")
+def build_moe_a2a_program(stream, niter, *, cfg=None, batch=1, seq=8,
+                          d_model=16, expert_ff=16, experts=None, top_k=2,
+                          dtype=jnp.float32, merged=True, host_sync_every=0,
+                          kernels=None, name="a2a", **_kw):
+    """Enqueue ``niter`` expert-parallel MoE layers: post -> local
+    gather/expert/scatter kernel -> start -> an aggregated put of the
+    partial output (+ aux) to EVERY peer shift -> complete -> wait ->
+    combine kernel. ``merged`` is schedule-level (signal fusion).
+    Returns (window, kernels)."""
+    stream.pattern = stream.pattern or "a2a"
+    n = stream.grid_shape[0]
+    if cfg is None:
+        experts = experts if experts is not None else 2 * n
+        cfg = _tiny_moe_cfg(experts, top_k, expert_ff)
+    else:
+        d_model = cfg.d_model
+        expert_ff = cfg.moe.expert_ff
+    if cfg.moe.num_experts % n:
+        raise ValueError(f"num_experts={cfg.moe.num_experts} must divide "
+                         f"over {n} shards")
+    e_l = cfg.moe.num_experts // n
+    win = create_a2a_window(stream, batch=batch, seq=seq, d_model=d_model,
+                            expert_ff=expert_ff, e_l=e_l, dtype=dtype,
+                            name=name)
+    kernels = kernels or make_moe_a2a_kernels(cfg, stream.grid_axes[0], n)
+    q = win.qual
+    recvp = [q(f"recvp{k}") for k in range(1, n)]
+    recva = [q(f"recva{k}") for k in range(1, n)]
+    for it in range(niter):
+        stream.post(win)
+        stream.launch(kernels["moe_shard"],
+                      [q("x"), q("router"), q("wg"), q("wu"), q("wd")],
+                      [q("partial"), q("paux")], label="moe_shard")
+        stream.start(win)
+        for k in range(1, n):
+            stream.put(win, q("partial"), q(f"recvp{k}"), (k,))
+            stream.put(win, q("paux"), q(f"recva{k}"), (k,))
+        stream.complete(win)
+        stream.wait(win)
+        stream.launch(kernels["combine"],
+                      [q("partial"), q("paux")] + recvp + recva,
+                      [q("out"), q("aux")], label="combine")
+        if host_sync_every and (it + 1) % host_sync_every == 0 \
+                and it + 1 < niter:
+            stream.host_sync()
+    return win, kernels
+
+
+def moe_a2a_st(cfg, params, x, mesh, *, axis="model", mode="st",
+               throttle="adaptive", resources=64, merged=True, rules=None):
+    """Expert-parallel MoE executed THROUGH the ST pipeline (lower ->
+    schedule -> compiled/host backend): the psum combine becomes the
+    aggregated-put access epoch. Numerically equivalent to
+    :func:`moe_a2a` on a pure expert-parallel mesh. x: (B,S,D)."""
+    from repro.core.stream import STStream
+
+    dt = x.dtype
+    B, S, D = x.shape
+    n = mesh.shape[axis]
+    e_l = cfg.moe.num_experts // n
+    F = cfg.moe.expert_ff
+    stream = STStream(mesh, (axis,))
+    win, _ = build_moe_a2a_program(stream, 1, cfg=cfg, batch=B, seq=S,
+                                   dtype=dt)
+    state = stream.allocate()
+    fills = {
+        # tokens + router replicated; each shard owns its experts' slice
+        "x": jnp.broadcast_to(x[None], (n, B, S, D)),
+        "router": jnp.broadcast_to(params["router"].astype(dt)[None],
+                                   (n, D, e_l * n)),
+        "wg": params["w_gate"].astype(dt).reshape(n, e_l, D, F),
+        "wu": params["w_up"].astype(dt).reshape(n, e_l, D, F),
+        "wd": params["w_down"].astype(dt).reshape(n, e_l, F, D),
+    }
+    for nm, val in fills.items():
+        key = win.qual(nm)
+        state[key] = jax.device_put(val, state[key].sharding)
+    state = stream.synchronize(state, mode=mode, throttle=throttle,
+                               resources=resources, merged=merged,
+                               donate=False)
+    out = state[win.qual("out")][0]           # every rank holds the sum
+    aux = state[win.qual("aux")][0, 0]
+    if cfg.moe.num_shared:
+        if rules is None:
+            from repro.sharding.rules import make_rules
+            rules = make_rules(cfg, None, None)
         out = out + _shared(params, x, dt, rules)
     return out, aux.astype(jnp.float32)

@@ -15,11 +15,12 @@ the benchmarks:
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.patterns import PatternTopology, register_pattern
 
 DIRECTIONS: List[Tuple[int, int, int]] = [
     (dx, dy, dz)
@@ -143,6 +144,12 @@ def compare_kernel():
 # Program builders
 # ---------------------------------------------------------------------------
 
+def faces_topology(grid_axes=("x", "y", "z")) -> PatternTopology:
+    """26-neighbor halo group; opposite = component-wise negation."""
+    return PatternTopology("faces", tuple(grid_axes),
+                           tuple(DIRECTIONS))
+
+
 def create_faces_window(stream, n, name="faces", extra_buffers=None):
     """Window with: src block, halo recv buffer per direction, accumulator,
     and an iteration counter so kernels are iteration-independent (the host
@@ -156,7 +163,8 @@ def create_faces_window(stream, n, name="faces", extra_buffers=None):
         bufs[f"send{d[0]}{d[1]}{d[2]}"] = ((surface_size(n, d),), jnp.float32)
     if extra_buffers:
         bufs.update(extra_buffers)
-    return stream.create_window(name, bufs, DIRECTIONS)
+    return stream.create_window(name, bufs, DIRECTIONS,
+                                topology=faces_topology(stream.grid_axes))
 
 
 def enqueue_faces_iteration(stream, win, n, kernels, merged=True):
@@ -209,6 +217,7 @@ def build_faces_program(stream, n, niter, merged=True, kernels=None,
     chunk becomes its own compiled segment). ``overlap_kernel`` enqueues
     an independent compute launch per iteration (paper §6.7); it runs on
     a buffer from ``extra_buffers``. Returns (window, kernels)."""
+    stream.pattern = stream.pattern or "faces"
     win = create_faces_window(stream, n, name=name,
                               extra_buffers=extra_buffers)
     kernels = kernels or make_faces_kernels(n)
@@ -222,3 +231,12 @@ def build_faces_program(stream, n, niter, merged=True, kernels=None,
                 and it + 1 < niter:
             stream.host_sync()
     return win, kernels
+
+
+@register_pattern("faces", grid_axes=("x", "y", "z"),
+                  default_grid=(2, 2, 2),
+                  doc="26-neighbor 3-D halo exchange (paper §6.2)")
+def _faces_pattern(stream, niter, *, n=(4, 4, 4), merged=True,
+                   host_sync_every=0, **kw):
+    return build_faces_program(stream, tuple(n), niter, merged=merged,
+                               host_sync_every=host_sync_every, **kw)

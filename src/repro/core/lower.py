@@ -20,7 +20,11 @@ descriptors with named trigger/completion counter slots:
   * wait   -> a wait-kernel descriptor polling the completion counter.
 
 Pure structural transformation: no jax imports, no policy decisions —
-throttling/ordering/fusion happen in :mod:`repro.core.schedule`.
+throttling/ordering/fusion happen in :mod:`repro.core.schedule`. The
+lowering is PATTERN-AGNOSTIC: which peers a post signals and which
+counter slot a put's completion lands in come from the window's
+:class:`~repro.core.patterns.PatternTopology` (Faces negation vs
+modular shift groups), never from halo-exchange assumptions here.
 """
 from __future__ import annotations
 
@@ -60,7 +64,7 @@ def lower_segment(stream, seg) -> TriggeredProgram:
                 nodes.append(TriggeredOp(
                     "signal", window=win.name, role="post",
                     direction=tuple(d),
-                    slot=stream.opposite_index(win, d),
+                    slot=win.opposite_index(d),
                     counter=win.post_sig, wire=True,
                     label=f"post{tuple(d)}"))
         elif op.kind == "start":
@@ -71,7 +75,7 @@ def lower_segment(stream, seg) -> TriggeredProgram:
         elif op.kind == "put":
             win = op.window
             d = tuple(op.put["direction"])
-            slot = stream.opposite_index(win, d)
+            slot = win.opposite_index(d)
             chained = TriggeredOp(
                 "signal", window=win.name, role="completion",
                 direction=d, slot=slot, counter=win.comp_sig, wire=True,
@@ -109,7 +113,9 @@ def lower_segment(stream, seg) -> TriggeredProgram:
             f"{sorted(pending)} — close the access epoch before "
             "host_sync() or synchronize()")
 
-    return TriggeredProgram(nodes=nodes, windows=dict(stream.windows))
+    return TriggeredProgram(
+        nodes=nodes, windows=dict(stream.windows),
+        meta={"pattern": getattr(stream, "pattern", "")})
 
 
 def split_segments(program) -> List[list]:

@@ -1,0 +1,178 @@
+"""Pattern-agnostic ST program builders (registry + topology).
+
+The paper's stream-triggered strategy is pattern-agnostic: deferred
+descriptors + counter-armed triggered ops are a general communication
+abstraction (companion work arXiv:2208.04817), not a halo-exchange
+trick. This module makes that concrete for the repo: every transport is
+an :class:`STPattern` — a builder that enqueues its program on an
+:class:`~repro.core.stream.STStream` against a :class:`PatternTopology`
+describing its neighbor group — and everything downstream (lowering,
+schedule passes, the three backends, the cost simulator, descriptor
+stats) is shared.
+
+Built-in patterns (registered by their home modules on first use):
+
+  * ``"faces"`` — 26-neighbor 3-D halo exchange (repro.core.halo)
+  * ``"ring"``  — ring-attention KV rotation: per ring step one
+    post/compute/start/put/complete/wait epoch with the block-attention
+    kernel as the overlapped launch (repro.core.ring)
+  * ``"a2a"``   — expert-parallel MoE combine as an aggregated-put
+    access epoch: each shard's partial output is put to every peer and
+    summed, replacing the psum collective (repro.core.ep_a2a)
+
+A topology owns the *direction algebra* that stage-1 lowering needs:
+which peers a window signals at post(), and which counter slot a put's
+completion lands in on the target (the OPPOSITE direction's slot).
+Faces negates component-wise ((1,0,-1) -> (-1,0,1)); shift groups like
+the a2a all-to-all negate modulo the grid ((k,) -> (n-k,)) so the group
+{1..n-1} is closed. That per-pattern choice used to be hard-coded in
+``STStream.opposite_index``.
+
+This module stays jax-free; builders (which create jnp kernel closures)
+are imported lazily, so device-free lowering/scheduling/simulation works
+anywhere.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class PatternTopology:
+    """Communication-neighbor description of one window's peer group.
+
+    ``group`` is the ordered tuple of direction tuples (counter slot k
+    belongs to group[k]); ``modular_opposite`` selects the direction
+    algebra: plain component negation (Faces) vs negation modulo
+    ``grid_shape`` (shift groups on a periodic ring, where -k == n-k).
+    """
+    name: str
+    grid_axes: Tuple[str, ...]
+    group: Tuple[Tuple[int, ...], ...]
+    modular_opposite: bool = False
+    grid_shape: Optional[Tuple[int, ...]] = None
+
+    def opposite(self, direction) -> Tuple[int, ...]:
+        d = tuple(direction)
+        if self.modular_opposite:
+            if self.grid_shape is None:
+                raise ValueError(
+                    f"topology {self.name!r}: modular opposite needs "
+                    "grid_shape")
+            return tuple((-x) % s for x, s in zip(d, self.grid_shape))
+        return tuple(-x for x in d)
+
+    def opposite_index(self, direction) -> int:
+        """Counter slot on the TARGET that direction's traffic lands in."""
+        return self.group.index(self.opposite(direction))
+
+
+def ring_topology(grid_axes=("data",)) -> PatternTopology:
+    """1-D double-ended ring: send +1, receive from -1."""
+    return PatternTopology("ring", tuple(grid_axes), ((1,), (-1,)))
+
+
+def shifts_topology(n: int, grid_axes=("model",)) -> PatternTopology:
+    """All-to-all on a periodic 1-D grid: every nonzero shift 1..n-1.
+    Opposite is modular (-k == n-k) so the group is closed."""
+    return PatternTopology("shifts", tuple(grid_axes),
+                           tuple((k,) for k in range(1, n)),
+                           modular_opposite=True, grid_shape=(n,))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class STPattern:
+    """A registered ST program builder.
+
+    ``build(stream, niter, *, merged=..., host_sync_every=..., **kw)``
+    enqueues ``niter`` iterations of the transport on ``stream`` and
+    returns ``(window, kernels)`` — the same contract as
+    ``halo.build_faces_program``.
+    """
+    name: str
+    build: Callable
+    grid_axes: Tuple[str, ...]
+    default_grid: Tuple[int, ...]
+    doc: str = ""
+
+
+_REGISTRY: Dict[str, STPattern] = {}
+
+
+def register_pattern(name: str, *, grid_axes, default_grid, doc: str = ""):
+    """Decorator registering an ST program builder under ``name``."""
+    def deco(fn):
+        _REGISTRY[name] = STPattern(name, fn, tuple(grid_axes),
+                                    tuple(default_grid), doc)
+        return fn
+    return deco
+
+
+def _ensure_builtins():
+    # builders live with their transports; importing registers them
+    from repro.core import ep_a2a, halo, ring  # noqa: F401
+
+
+def available_patterns() -> List[str]:
+    _ensure_builtins()
+    return sorted(_REGISTRY)
+
+
+def get_pattern(name: str) -> STPattern:
+    _ensure_builtins()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown ST pattern {name!r}; "
+                       f"available: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def build_pattern(stream, name: str, niter: int, **kw):
+    """Enqueue ``niter`` iterations of a registered pattern on ``stream``."""
+    return get_pattern(name).build(stream, niter, **kw)
+
+
+# ---------------------------------------------------------------------------
+# device-free programs + derived cost (shared by tests, CI, benchmarks)
+# ---------------------------------------------------------------------------
+
+def pattern_programs(name: str, niter: int, *, grid=None,
+                     throttle: str = "adaptive", resources: int = 16,
+                     merged: bool = True, ordered: bool = False,
+                     host_sync_every: int = 0, **build_kw):
+    """Lower+schedule a pattern on a device-free stream — the same
+    builder and passes the executors use, minus a mesh."""
+    from repro.core.stream import STStream
+
+    p = get_pattern(name)
+    grid = tuple(grid) if grid is not None else p.default_grid
+    stream = STStream(None, p.grid_axes, grid_shape=grid)
+    p.build(stream, niter, merged=merged, host_sync_every=host_sync_every,
+            **build_kw)
+    return stream.scheduled_programs(throttle=throttle, resources=resources,
+                                     merged=merged, ordered=ordered)
+
+
+def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
+                     resources: int = 16, merged: bool = True,
+                     ordered: bool = False, host_orchestrated: bool = False,
+                     cm=None, grid=None, **build_kw) -> float:
+    """Derived critical-path time of ``niter`` pattern iterations.
+
+    ``policy="application"`` (§5.2.1) splits the program every iteration
+    and keeps the runtime's static weak-sync edges, so the Fig. 13
+    ordering adaptive <= static <= application holds structurally for
+    EVERY pattern, exactly as for Faces."""
+    from repro.core.throttle import simulate_pipeline
+
+    host_sync_every = 1 if policy == "application" else 0
+    throttle = "static" if policy == "application" else policy
+    progs = pattern_programs(name, niter, grid=grid, throttle=throttle,
+                             resources=resources, merged=merged,
+                             ordered=ordered,
+                             host_sync_every=host_sync_every, **build_kw)
+    return simulate_pipeline(progs, cm, host_orchestrated)

@@ -8,16 +8,24 @@ byte exactly once wherever it lives. For training-length sequences the
 full rotation variant (ppermute of KV blocks with compute/transfer double
 buffering) is ring_attention_train below — the ST discipline: transfers
 for step i+1 are enqueued (deferred) while step i computes.
+
+``build_ring_program`` lowers that rotation onto the triggered-op DAG:
+each ring step is one post/attend/start/put/complete/wait access epoch
+(the block-attention kernel is the overlapped compute launch, the KV
+blocks are the payload puts on the +1 ring direction), so throttling,
+merged-signal fusion, P2P ordering, and the cost simulator apply to ring
+attention exactly as they do to Faces. ``ring_attention_st`` runs it
+through any of the three backends and matches ``ring_attention_train``
+numerically.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.compat import shard_map
+from repro.core.patterns import register_pattern, ring_topology
 
 NEG_INF = -1e30
 
@@ -119,3 +127,146 @@ def ring_attention_train(q, k, v, *, mesh, axis="data", causal=True):
         in_specs=(P(None, axis, None, None),) * 3,
         out_specs=P(None, axis, None, None), check_vma=False,
     )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# ST program: the rotation lowered onto the triggered-op DAG
+# ---------------------------------------------------------------------------
+
+def make_ring_kernels(axis, n, seq_per_rank, head_dim, causal=True,
+                      dtype=jnp.float32):
+    """Iteration-stable kernel closures for the ST ring program (one set
+    per program; re-enqueued every ring step so per-op executables are
+    compiled once). Buffers carry the shard_map leading rank dim R=1."""
+    S_l = seq_per_rank
+    scale = 1.0 / (head_dim ** 0.5)
+
+    def reset(m, l, acc, step):
+        return (jnp.full_like(m, NEG_INF), jnp.zeros_like(l),
+                jnp.zeros_like(acc), jnp.zeros_like(step))
+
+    def attend(q, k_r, v_r, m, l, acc, step):
+        """One ring step of block flash attention — identical math to the
+        scan body of ring_attention_train; the step counter buffer keeps
+        the closure iteration-independent."""
+        i = jax.lax.axis_index(axis)
+        r = step[0, 0]
+        q_pos = i * S_l + jnp.arange(S_l)
+        src_block = jnp.mod(i - r, n)
+        k_pos = src_block * S_l + jnp.arange(S_l)
+        s = jnp.einsum("bqhd,bshd->bhqs", q[0], k_r[0]) \
+            .astype(jnp.float32) * scale
+        if causal:
+            mask = k_pos[None, :] <= q_pos[:, None]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m[0], jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m[0] - m_new)
+        l_new = l[0] * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc[0] * alpha[..., None] + jnp.einsum(
+            "bhqs,bshd->bhqd", p.astype(v_r.dtype), v_r[0])
+        return m_new[None], l_new[None], acc_new[None], step + 1
+
+    def rotate(recv_k, recv_v):
+        # double-buffer swap: the received blocks become the next step's
+        # current KV (the put already moved the bytes)
+        return recv_k, recv_v
+
+    def finalize(acc, l):
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.einsum("rbhqd->rbqhd", out).astype(dtype)
+
+    return {"reset": reset, "attend": attend, "rotate": rotate,
+            "finalize": finalize}
+
+
+def create_ring_window(stream, *, batch, seq_per_rank, heads, head_dim,
+                       dtype=jnp.float32, name="ring"):
+    """Window with the local Q block, the rotating KV double buffers, the
+    f32 flash-merge accumulators, and a step counter (so the attend
+    kernel is iteration-independent, like Faces' "it")."""
+    blk = (batch, seq_per_rank, heads, head_dim)
+    bufs = {"q": (blk, dtype), "k": (blk, dtype), "v": (blk, dtype),
+            "recvk": (blk, dtype), "recvv": (blk, dtype),
+            "m": ((batch, heads, seq_per_rank), jnp.float32),
+            "l": ((batch, heads, seq_per_rank), jnp.float32),
+            "acc": ((batch, heads, seq_per_rank, head_dim), jnp.float32),
+            "step": ((1,), jnp.int32),
+            "out": (blk, dtype)}
+    topo = ring_topology(stream.grid_axes)
+    return stream.create_window(name, bufs, list(topo.group), topology=topo)
+
+
+@register_pattern("ring", grid_axes=("data",), default_grid=(4,),
+                  doc="ring-attention KV rotation as put epochs per step")
+def build_ring_program(stream, niter, *, batch=1, seq_per_rank=8, heads=2,
+                       head_dim=8, causal=True, dtype=jnp.float32,
+                       merged=True, host_sync_every=0, kernels=None,
+                       name="ring", **_kw):
+    """Enqueue ``niter`` full ring-attention rotations: per ring step one
+    access epoch — post -> attend kernel (overlap launch) -> start ->
+    put(k)/put(v) on the +1 direction -> complete -> wait -> rotate
+    kernel — then a finalize kernel. ``merged`` is schedule-level for
+    this pattern (signal fusion); the builder's epoch structure is
+    identical either way. Returns (window, kernels)."""
+    stream.pattern = stream.pattern or "ring"
+    n = stream.grid_shape[0]
+    axis = stream.grid_axes[0]
+    win = create_ring_window(stream, batch=batch, seq_per_rank=seq_per_rank,
+                             heads=heads, head_dim=head_dim, dtype=dtype,
+                             name=name)
+    kernels = kernels or make_ring_kernels(axis, n, seq_per_rank, head_dim,
+                                           causal=causal, dtype=dtype)
+    q = win.qual
+    accs = [q("m"), q("l"), q("acc"), q("step")]
+    for it in range(niter):
+        stream.launch(kernels["reset"], accs, accs, label="reset")
+        for _ in range(n):
+            stream.post(win)
+            stream.launch(kernels["attend"],
+                          [q("q"), q("k"), q("v")] + accs, accs,
+                          label="attend")
+            stream.start(win)
+            stream.put(win, q("k"), q("recvk"), (1,))
+            stream.put(win, q("v"), q("recvv"), (1,))
+            stream.complete(win)
+            stream.wait(win)
+            stream.launch(kernels["rotate"], [q("recvk"), q("recvv")],
+                          [q("k"), q("v")], label="rotate")
+        stream.launch(kernels["finalize"], [q("acc"), q("l")], [q("out")],
+                      label="finalize")
+        if host_sync_every and (it + 1) % host_sync_every == 0 \
+                and it + 1 < niter:
+            stream.host_sync()
+    return win, kernels
+
+
+def ring_attention_st(q, k, v, *, mesh, axis="data", causal=True,
+                      mode="st", throttle="adaptive", resources=64,
+                      merged=True):
+    """Ring attention executed THROUGH the ST pipeline (lower -> schedule
+    -> compiled/host backend) instead of the direct shard_map scan.
+    Numerically equivalent to :func:`ring_attention_train`."""
+    from repro.core.stream import STStream
+
+    B, S, H, hd = q.shape
+    n = mesh.shape[axis]
+    S_l = S // n
+    stream = STStream(mesh, (axis,))
+    win, _ = build_ring_program(stream, 1, batch=B, seq_per_rank=S_l,
+                                heads=H, head_dim=hd, causal=causal,
+                                dtype=q.dtype)
+    state = stream.allocate()
+
+    def blocks(x):
+        # (B, S, H, hd) -> (n, B, S_l, H, hd): shard i owns block i
+        return jnp.moveaxis(x.reshape(B, n, S_l, H, hd), 1, 0)
+
+    for nm, arr in (("q", q), ("k", k), ("v", v)):
+        key = win.qual(nm)
+        state[key] = jax.device_put(blocks(arr), state[key].sharding)
+    state = stream.synchronize(state, mode=mode, throttle=throttle,
+                               resources=resources, merged=merged,
+                               donate=False)
+    out = state[win.qual("out")]                  # (n, B, S_l, H, hd)
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)

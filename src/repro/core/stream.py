@@ -85,14 +85,17 @@ class STStream:
             self.grid_shape = tuple(grid_shape)
         self.num_ranks = int(np.prod(self.grid_shape))
         self.periodic = periodic
+        self.pattern = ""          # set by pattern builders; flows into
+        #                            program meta / #stats / JSON records
         self.program: List[_Op] = []
         self.windows: Dict[str, STWindow] = {}
         self._perm_cache: Dict[tuple, list] = {}
         self._sched_cache: Dict[tuple, List[TriggeredProgram]] = {}
 
     # -- window management --------------------------------------------------
-    def create_window(self, name, buffers, group) -> STWindow:
-        win = STWindow(name=name, buffers=buffers, group=list(group))
+    def create_window(self, name, buffers, group, topology=None) -> STWindow:
+        win = STWindow(name=name, buffers=buffers, group=list(group),
+                       topology=topology)
         self.windows[name] = win
         return win
 
@@ -137,6 +140,7 @@ class STStream:
 
     def clear(self):
         self.program = []
+        self.pattern = ""       # a rebuild may enqueue a different pattern
         self._sched_cache.clear()
         # jitted-executable caches key on id(fn) of kernel closures; a
         # rebuild creates fresh closures, so stale entries would pin old
@@ -171,8 +175,9 @@ class STStream:
         return pairs
 
     def opposite_index(self, win: STWindow, direction) -> int:
-        opp = tuple(-x for x in direction)
-        return win.group.index(opp)
+        """Kept for callers predating per-pattern topologies; the
+        direction algebra now lives on the window."""
+        return win.opposite_index(direction)
 
     # -- compile pipeline: lower (1) + schedule (2) ---------------------------
     def scheduled_programs(self, *, throttle: str = "adaptive",

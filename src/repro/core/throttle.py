@@ -113,7 +113,9 @@ def simulate_pipeline(progs: Sequence[TriggeredProgram],
 
 
 # ---------------------------------------------------------------------------
-# convenience: device-free Faces programs for the cost model + tests
+# convenience: device-free Faces wrappers kept for existing callers —
+# the generic versions (any pattern) are patterns.pattern_programs /
+# patterns.simulate_pattern
 # ---------------------------------------------------------------------------
 
 def faces_programs(niter: int, n=(8, 8, 8), grid=(2, 2, 2), *,
@@ -124,32 +126,24 @@ def faces_programs(niter: int, n=(8, 8, 8), grid=(2, 2, 2), *,
     builder and passes the executors use, minus a mesh. With
     ``host_sync_every=k`` the program splits every k iterations
     (application-level throttling, §5.2.1)."""
-    from repro.core import halo
-    from repro.core.stream import STStream
+    from repro.core.patterns import pattern_programs
 
-    stream = STStream(None, ("x", "y", "z"), grid_shape=grid)
-    halo.build_faces_program(stream, n, niter, merged=merged,
-                             host_sync_every=host_sync_every)
-    return stream.scheduled_programs(throttle=throttle, resources=resources,
-                                     merged=merged, ordered=ordered)
+    return pattern_programs("faces", niter, grid=grid, n=n,
+                            throttle=throttle, resources=resources,
+                            merged=merged, ordered=ordered,
+                            host_sync_every=host_sync_every)
 
 
 def simulate_faces(niter: int, n=(8, 8, 8), *, policy: str = "adaptive",
                    resources: int = 16, merged: bool = True,
                    ordered: bool = False, host_orchestrated: bool = False,
                    cm: CostModel = None) -> float:
-    """Derived critical-path time of the Faces inner loop under a policy.
+    """Derived critical-path time of the Faces inner loop under a policy
+    (see :func:`repro.core.patterns.simulate_pattern` for the
+    application-split semantics and the Fig. 13 ordering argument)."""
+    from repro.core.patterns import simulate_pattern
 
-    ``policy="application"`` (§5.2.1) splits the program every iteration
-    — the finest sync the app can insert (an access epoch's puts are
-    indivisible) — and keeps the runtime's static weak-sync edges: when
-    an epoch alone exhausts the R slots, the pool must still be
-    reclaimed before the next put fires. Application's schedule thus
-    contains static's (which contains adaptive's), so the Fig. 13
-    ordering adaptive <= static <= application holds structurally."""
-    host_sync_every = 1 if policy == "application" else 0
-    throttle = "static" if policy == "application" else policy
-    progs = faces_programs(niter, n, throttle=throttle, resources=resources,
-                           merged=merged, ordered=ordered,
-                           host_sync_every=host_sync_every)
-    return simulate_pipeline(progs, cm, host_orchestrated)
+    return simulate_pattern("faces", niter, n=n, policy=policy,
+                            resources=resources, merged=merged,
+                            ordered=ordered,
+                            host_orchestrated=host_orchestrated, cm=cm)

@@ -173,6 +173,7 @@ class TriggeredProgram:
             "critical_path_depth": self.critical_path_depth(),
             "throttle": self.meta.get("throttle", "none"),
             "merged": self.meta.get("merged", True),
+            "pattern": self.meta.get("pattern", ""),
         }
 
 

@@ -13,11 +13,10 @@ sharded over all grid axes (shard_map gives each device its local block).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Sequence, Tuple
 
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclass
@@ -25,6 +24,19 @@ class STWindow:
     name: str
     buffers: Dict[str, Tuple[tuple, object]]   # name -> (local_shape, dtype)
     group: Sequence                              # neighbor directions/peers
+    # per-pattern direction algebra (repro.core.patterns.PatternTopology);
+    # None falls back to component negation (the Faces convention)
+    topology: object = None
+
+    def opposite_index(self, direction) -> int:
+        """Counter slot on the TARGET rank that traffic sent in
+        ``direction`` lands in — the opposite direction's group index.
+        How "opposite" is computed is a pattern property: Faces negates
+        component-wise, shift groups negate modulo the grid."""
+        if self.topology is not None:
+            return self.topology.opposite_index(direction)
+        opp = tuple(-x for x in direction)
+        return list(self.group).index(opp)
 
     @property
     def post_sig(self) -> str:

@@ -1,7 +1,6 @@
 """Jit'd wrapper for flash-decode (inference-only: no vjp needed)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention.kernel import decode_attention_fwd

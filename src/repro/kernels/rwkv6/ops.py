@@ -4,7 +4,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.rwkv6.kernel import wkv6_fwd
 from repro.kernels.rwkv6.ref import wkv6_ref

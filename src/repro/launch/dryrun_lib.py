@@ -26,7 +26,6 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import SHAPES, get_config, shape_applicable
 from repro.launch.hlo_analysis import (collective_stats,

@@ -71,17 +71,19 @@ def roofline_table(recs, mesh="16x16"):
 
 
 def st_stats_table(recs):
-    """Descriptor-DAG stats per Faces benchmark run (faces_worker
-    --json-dir records)."""
-    rows = ["| name | mode | throttle | us/iter | derived | puts/epoch | "
-            "hwm | crit depth | dep edges |",
-            "|---|---|---|---|---|---|---|---|---|"]
+    """Descriptor-DAG stats per ST benchmark run (faces_worker
+    --json-dir records, any pattern)."""
+    rows = ["| name | pattern | mode | throttle | us/iter | derived | "
+            "puts/epoch | hwm | crit depth | dep edges |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
     for r in recs:
         if "stats" not in r:
             continue
         s = r["stats"]
+        pattern = r.get("pattern") or s.get("pattern") or "faces"
         rows.append(
-            f"| {r['name']} | {r['mode']} | {r.get('throttle', '-')} | "
+            f"| {r['name']} | {pattern} | {r['mode']} | "
+            f"{r.get('throttle', '-')} | "
             f"{r['us_per_iter']:.1f} | {r['derived_us_per_iter']:.2f} | "
             f"{s['puts_per_epoch']:.0f} | {s['resource_high_water']} | "
             f"{s['critical_path_depth']} | {s['dep_edges']} |")

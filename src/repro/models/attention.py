@@ -7,8 +7,6 @@ Three attention-core implementations selected by cfg.attn_impl:
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -13,9 +13,6 @@ and PartitionSpecs (pjit).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 from jax.ad_checkpoint import checkpoint_name as _ckpt_name
 
 import jax

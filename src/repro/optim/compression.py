@@ -7,7 +7,6 @@ error feedback keeps the optimization unbiased in expectation.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 BLOCK = 1024

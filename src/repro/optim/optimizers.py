@@ -13,7 +13,6 @@ Memory policy knobs (per arch config):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

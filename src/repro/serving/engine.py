@@ -15,13 +15,13 @@ from __future__ import annotations
 import itertools
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import cache_specs, init_params
+from repro.models import cache_specs
 from repro.models.params import is_spec
 from repro.train.steps import make_decode_step, make_prefill_step
 

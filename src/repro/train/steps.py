@@ -10,7 +10,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models import (cache_specs, forward, lm_loss, logits_from_hidden,
+from repro.models import (cache_specs, forward, logits_from_hidden,
                           model_specs)
 from repro.models.model import cast_big_params, lm_loss_fused
 from repro.models.params import is_spec, param_pspecs

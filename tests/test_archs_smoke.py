@@ -7,10 +7,10 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
-from repro.models import (cache_specs, forward, init_params,
-                          logits_from_hidden, lm_loss, model_specs)
-from repro.models.params import abstract_params, init_params as init_p
-from repro.optim import opt_init_specs, opt_update
+from repro.models import (cache_specs, forward, logits_from_hidden,
+                          model_specs)
+from repro.models.params import init_params as init_p
+from repro.optim import opt_init_specs
 from repro.sharding.rules import make_rules
 from repro.train.steps import make_train_step
 

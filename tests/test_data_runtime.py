@@ -1,8 +1,6 @@
 """Data pipeline determinism + fault-tolerance runtime detectors."""
-import time
 
 import numpy as np
-import pytest
 
 from repro.data import SyntheticTokens, make_batch_iterator
 from repro.runtime import HeartbeatMonitor, StragglerDetector, TrainingRuntime

@@ -2,15 +2,13 @@
 data, checkpoint/restart reproduces the exact trajectory, serving engine
 greedy-decodes consistently with the raw model."""
 import dataclasses
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
-from repro.data import SyntheticTokens, make_batch_iterator
+from repro.data import SyntheticTokens
 from repro.models import init_params, model_specs
 from repro.optim import opt_init_specs
 from repro.serving import Request, ServingEngine
