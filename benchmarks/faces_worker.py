@@ -62,6 +62,14 @@ def main():
                     help="enqueue an independent compute kernel per iter "
                          "(faces only)")
     ap.add_argument("--resources", type=int, default=16)
+    ap.add_argument("--nstreams", type=int, default=1,
+                    help="stream-assignment pass: 1 compute stream + "
+                         "nstreams-1 communication streams")
+    ap.add_argument("--double_buffer", type=int, default=0,
+                    help="ping/pong window buffers (alternating epochs)")
+    ap.add_argument("--verify_overlap", type=int, default=0,
+                    help="also run the single-stream schedule and require "
+                         "bit-identical pattern outputs")
     ap.add_argument("--name", default=None)
     ap.add_argument("--json-dir", default=None,
                     help="also write a {name}.json record (descriptor "
@@ -86,13 +94,16 @@ def main():
                          f"{len(pat.grid_axes)}-d grid, got {args.grid!r}")
     mesh = make_mesh(grid, pat.grid_axes)
 
+    double_buffer = bool(args.double_buffer)
     stream = STStream(mesh, pat.grid_axes)
-    pat.build(stream, args.niter, merged=bool(args.merged),
-              **build_kwargs(args, ndev))
+    win, _ = pat.build(stream, args.niter, merged=bool(args.merged),
+                       double_buffer=double_buffer,
+                       **build_kwargs(args, ndev))
     state = stream.allocate()
 
     throttle = args.throttle
     merged = bool(args.merged)
+    nstreams = args.nstreams
     if args.mode == "host":
         # the host baseline has no runtime throttling engine — its
         # resource reclaim is the blocking per-op dispatch itself.
@@ -100,11 +111,14 @@ def main():
         # executes; ordering IS preserved by the serialized dispatch,
         # so ordered edges stay. Merged signal kernels (§5.4) are an
         # ST-side contribution: the standard active-RMA baseline posts
-        # per-neighbor signals and wire completions.
+        # per-neighbor signals and wire completions. It also has no
+        # device streams: every dispatch serializes on the host.
         throttle = "none"
         merged = False
+        nstreams = 1
     sched_opts = dict(throttle=throttle, resources=args.resources,
-                      merged=merged, ordered=bool(args.ordered))
+                      merged=merged, ordered=bool(args.ordered),
+                      nstreams=nstreams)
 
     def run_once(st):
         return stream.synchronize(st, mode=args.mode, donate=False,
@@ -125,6 +139,32 @@ def main():
         progs, CostModel(),
         host_orchestrated=(args.mode == "host")) / args.niter
 
+    if args.verify_overlap:
+        # the overlapped schedule must not change a single output bit vs
+        # the single-stream schedule (both from zeroed state; the
+        # overlapped run reuses this worker's compiled executable)
+        import numpy as np
+        outputs = {"faces": ["acc", "res", "src", "it"],
+                   "ring": ["out"], "a2a": ["out", "aux"]}[args.pattern]
+        got_state = stream.synchronize(stream.allocate(), mode=args.mode,
+                                       donate=False, **sched_opts)
+        got = {b: np.asarray(got_state[win.qual(b)]) for b in outputs}
+        ref_stream = STStream(mesh, pat.grid_axes)
+        ref_win, _ = pat.build(ref_stream, args.niter,
+                               merged=bool(args.merged),
+                               double_buffer=False,
+                               **build_kwargs(args, ndev))
+        ref_state = ref_stream.synchronize(
+            ref_stream.allocate(), mode=args.mode, donate=False,
+            **dict(sched_opts, nstreams=1))
+        ref = {b: np.asarray(ref_state[ref_win.qual(b)]) for b in outputs}
+        for b in outputs:
+            if not (got[b] == ref[b]).all():
+                sys.exit(f"overlap schedule changed output {b!r} "
+                         f"(max abs diff {abs(got[b] - ref[b]).max()})")
+        print(f"# overlap-verified {args.pattern} nstreams={nstreams} "
+              f"double_buffer={int(double_buffer)} outputs={outputs}")
+
     stats = progs[0].stats()
     stats["segments"] = len(progs)
     name = args.name or (f"{args.pattern}_{args.mode}_{throttle}"
@@ -141,7 +181,7 @@ def main():
         rec = dict(name=name, pattern=args.pattern, mode=args.mode,
                    grid=list(grid), block=args.block, niter=args.niter,
                    us_per_iter=us_per_iter, derived_us_per_iter=derived,
-                   **sched_opts, stats=stats)
+                   double_buffer=double_buffer, **sched_opts, stats=stats)
         with open(os.path.join(args.json_dir, f"{name}.json"), "w") as f:
             json.dump(rec, f, indent=1)
 

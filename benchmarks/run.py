@@ -14,15 +14,20 @@ Sections:
   fig16_17 P2P-ordered vs RMA vs ST, intra (8r) and multi (64r)
   ring   ST-lowered ring-attention rotation vs host baseline (4 ranks)
   a2a    expert-parallel MoE aggregated-put combine vs host baseline
+  overlap  multi-stream schedule (assign_streams + double-buffered
+         windows) vs single stream, all patterns, outputs verified
+         bit-identical in-worker
   roofline  per (arch x shape x mesh) terms from results/dryrun
   throughput  tiny-config train tokens/s
 
 Worker failures are COUNTED and the harness exits nonzero (CI gates on
 this). ``--json PATH`` writes every parsed row + failures + invariant
 checks as one JSON record; ``--check-invariants`` asserts the Fig. 13
-structural ordering adaptive <= static <= application on derived costs
-for every ST pattern. ``BENCH_SMOKE=1`` keeps only the small-grid
-configs (CI), ``BENCH_NITER`` overrides iterations per worker.
+structural ordering adaptive <= static <= application AND the overlap
+rule (nstreams=2 + double_buffer derived cost <= single stream) on
+derived costs for every ST pattern. ``BENCH_SMOKE=1`` keeps only the
+small-grid configs (CI), ``BENCH_NITER`` overrides iterations per
+worker.
 """
 import json
 import os
@@ -67,7 +72,7 @@ def _worker(section="", **kw):
                          "stderr": stderr[-400:]})
         return False
     for line in r.stdout.strip().splitlines():
-        if line.startswith("#stats"):
+        if line.startswith("#"):
             print(line, flush=True)
         elif "," in line:
             print(line, flush=True)
@@ -76,7 +81,10 @@ def _worker(section="", **kw):
                 try:
                     RESULTS.append({"section": section, "name": parts[0],
                                     "us_per_call": float(parts[1]),
-                                    "derived": float(parts[2])})
+                                    "derived": float(parts[2]),
+                                    "nstreams": int(kw.get("nstreams", 1)),
+                                    "double_buffer": bool(int(
+                                        kw.get("double_buffer", 0)))})
                 except ValueError:
                     pass
     return True
@@ -151,6 +159,27 @@ def a2a():
                 throttle=thr, resources=8, name=f"a2a_st_{thr}_4r")
 
 
+def overlap():
+    """Multi-stream overlap: stream-assignment pass + double-buffered
+    windows vs the single-stream schedule, for every registered pattern.
+    Each overlapped worker also re-runs the single-stream schedule
+    in-process and requires bit-identical pattern outputs."""
+    print("# overlap: nstreams/double_buffer sweep (st mode, adaptive)")
+    specs = [("faces", dict(grid="2,2,2", block=8)),
+             ("ring", dict(pattern="ring", grid="4", block=16)),
+             ("a2a", dict(pattern="a2a", grid="4", block=16))]
+    sweeps = [(2, 1)] if SMOKE else [(2, 0), (2, 1), (3, 1)]
+    for pat, kw in specs:
+        _worker("overlap", mode="st", throttle="adaptive", merged=1,
+                resources=8, nstreams=1,
+                name=f"overlap_{pat}_1s", **kw)
+        for ns, db in sweeps:
+            _worker("overlap", mode="st", throttle="adaptive", merged=1,
+                    resources=8, nstreams=ns, double_buffer=db,
+                    verify_overlap=1,
+                    name=f"overlap_{pat}_{ns}s_db{db}", **kw)
+
+
 def roofline():
     print("# roofline: per-cell terms from results/dryrun "
           "(us_per_call = bound step time; derived = roofline fraction)")
@@ -206,32 +235,44 @@ def throughput():
 
 
 def check_invariants():
-    """Fig. 13 structural ordering on DERIVED costs, for EVERY registered
+    """Structural invariants on DERIVED costs, for EVERY registered
     pattern, from a device-free lower+schedule+simulate (no fake devices
-    needed)."""
+    needed): the Fig. 13 throttle ordering, and the overlap rule — the
+    multi-stream double-buffered schedule never costs more than the
+    single-stream schedule it is bit-identical to."""
     sys.path.insert(0, os.path.join(ROOT, "src"))
     from repro.core.patterns import available_patterns, simulate_pattern
 
     size_overrides = {"faces": dict(n=(4, 4, 4))}
     eps = 1e-9
     checks = []
-    print("# invariants: derived adaptive <= static <= application")
+    print("# invariants: derived adaptive <= static <= application; "
+          "overlapped(nstreams=2, double_buffer) <= single-stream")
     for pat in available_patterns():
         kw = size_overrides.get(pat, {})
         t = {pol: simulate_pattern(pat, 4, policy=pol, resources=8, **kw)
              for pol in ("adaptive", "static", "application")}
         ok = (t["adaptive"] <= t["static"] + eps
               and t["static"] <= t["application"] + eps)
-        checks.append(dict(pattern=pat, ok=ok, **t))
+        checks.append(dict(rule="throttle_order", pattern=pat, ok=ok, **t))
         print(f"# invariant {pat}: adaptive={t['adaptive']:.2f} "
               f"static={t['static']:.2f} application={t['application']:.2f}"
               f" -> {'OK' if ok else 'VIOLATED'}")
+        overlapped = simulate_pattern(pat, 4, policy="adaptive",
+                                      resources=8, nstreams=2,
+                                      double_buffer=True, **kw)
+        ok2 = overlapped <= t["adaptive"] + eps
+        checks.append(dict(rule="overlap", pattern=pat, ok=ok2,
+                           single=t["adaptive"], overlapped=overlapped,
+                           nstreams=2, double_buffer=True))
+        print(f"# invariant {pat}: overlapped={overlapped:.2f} <= "
+              f"single={t['adaptive']:.2f} -> {'OK' if ok2 else 'VIOLATED'}")
     return checks
 
 
 SECTIONS = {
     "fig12": fig12, "fig13": fig13, "fig14": fig14, "fig15": fig15,
-    "fig16_17": fig16_17, "ring": ring, "a2a": a2a,
+    "fig16_17": fig16_17, "ring": ring, "a2a": a2a, "overlap": overlap,
     "roofline": roofline, "throughput": throughput,
 }
 
@@ -244,8 +285,9 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write rows/failures/invariants as one JSON file")
     ap.add_argument("--check-invariants", action="store_true",
-                    help="assert adaptive <= static <= application on "
-                         "derived costs for every ST pattern")
+                    help="assert adaptive <= static <= application and "
+                         "overlapped <= single-stream on derived costs "
+                         "for every ST pattern")
     args = ap.parse_args()
     names = (args.only.split(",") if args.only else list(SECTIONS))
     print("name,us_per_call,derived")

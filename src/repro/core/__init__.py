@@ -16,7 +16,8 @@ from repro.core.patterns import (PatternTopology, STPattern,
                                  available_patterns, build_pattern,
                                  get_pattern, pattern_programs,
                                  register_pattern, simulate_pattern)
-from repro.core.schedule import schedule
+from repro.core.schedule import (assign_streams, schedule,
+                                 stream_interleaved_order, validate_deps)
 from repro.core.throttle import (CostModel, faces_programs, simulate_faces,
                                  simulate_pipeline, simulate_program)
 from repro.core import halo
@@ -24,7 +25,8 @@ from repro.core import halo
 __all__ = ["STStream", "STWindow", "TriggeredOp", "TriggeredProgram",
            "ResourcePool", "CostModel", "PatternTopology", "STPattern",
            "counters_expected", "lower_segment", "split_segments",
-           "schedule", "register_pattern", "get_pattern",
+           "schedule", "assign_streams", "stream_interleaved_order",
+           "validate_deps", "register_pattern", "get_pattern",
            "available_patterns", "build_pattern", "pattern_programs",
            "simulate_pattern", "simulate_program", "simulate_pipeline",
            "simulate_faces", "faces_programs", "halo"]

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compat import shard_map
+from repro.core.schedule import stream_interleaved_order
+from repro.core.window import is_counter_name
 
 
 def _tie(x, dep):
@@ -40,17 +42,39 @@ def _tie(x, dep):
 
 
 class _EmitCtx:
-    """Trace-local emission state: completion tokens per put op_id and
-    the per-window post-counter snapshot taken by "start"."""
+    """Trace-local emission state: a completion/effect token per emitted
+    op_id (what dependency edges tie to) and the post-counter snapshot
+    each "start" takes, keyed by (window, epoch) so epochs of the same
+    window in flight on different streams never clobber each other."""
 
     def __init__(self):
         self.tokens: Dict[int, Any] = {}
-        self.trig: Dict[str, Any] = {}
+        self.trig: Dict[tuple, Any] = {}
 
 
 def _ppermute(stream, x, direction):
     return jax.lax.ppermute(x, stream.grid_axes,
                             stream.perm_for(tuple(direction)))
+
+
+def _local_rank(stream):
+    """Linear rank index inside shard_map — same strides as perm_for's
+    linearization (stream.rank_strides is the single definition)."""
+    idx = 0
+    for a, s in zip(stream.grid_axes, stream.rank_strides()):
+        idx = idx + jax.lax.axis_index(a) * s
+    return idx
+
+
+def _arrival_mask(stream, direction):
+    """1 where this rank RECEIVES a payload sent in ``direction`` —
+    non-periodic boundary ranks have no source and must not see a
+    completion bump."""
+    import numpy as np
+    recv = np.zeros((stream.num_ranks,), np.int32)
+    for _, dst in stream.perm_for(tuple(direction)):
+        recv[dst] = 1
+    return recv
 
 
 def _emit_completion_signal(stream, node, st, arrival_token):
@@ -65,21 +89,42 @@ def _emit_completion_signal(stream, node, st, arrival_token):
     else:
         # merged/local bump: the arrived payload IS the completion event
         one = _tie(jnp.ones((1,), jnp.int32), arrival_token)
+        if not stream.periodic:
+            # a boundary rank with no source in this direction received
+            # only the zero-fill, not a payload: no completion lands
+            mask = jnp.asarray(_arrival_mask(stream, node.direction))
+            one = one * mask[_local_rank(stream)]
         st[ch.counter] = st[ch.counter].at[:, ch.slot].add(one)
     return st
 
 
 def emit_node(stream, node, st, ctx, *, with_chained=True):
-    """Apply one descriptor's state effect. Shared by both executors."""
+    """Apply one descriptor's state effect. Shared by both executors.
+
+    Every node leaves a tiny effect token in ``ctx.tokens`` so dependency
+    edges from ANY node kind (cross-stream conflict edges, throttle
+    edges) can be tied as dataflow."""
     if node.kind == "kernel":
         args = [st[r] for r in node.reads]
+        if args:
+            for dep in node.deps:
+                args[0] = _tie(args[0], ctx.tokens.get(dep))
         outs = node.fn(*args)
         if not isinstance(outs, (tuple, list)):
             outs = (outs,)
         for w, o in zip(node.writes, outs):
             st[w] = o
+        if not args:
+            # write-only kernel: thread its dep edges through the outputs
+            for dep in node.deps:
+                for w in node.writes:
+                    st[w] = _tie(st[w], ctx.tokens.get(dep))
+        if node.writes:
+            ctx.tokens[node.op_id] = st[node.writes[0]].ravel()[:1]
     elif node.kind == "signal" and node.role == "post":
         sig = st[node.counter]
+        for dep in node.deps:
+            sig = _tie(sig, ctx.tokens.get(dep))
         if node.fused:
             # merged signal kernel (paper §5.4): one update for all peers
             upd = jnp.zeros_like(sig)
@@ -92,13 +137,18 @@ def emit_node(stream, node, st, ctx, *, with_chained=True):
                                 node.direction)
             sig = sig.at[:, node.slot].add(arrived[:, 0])
         st[node.counter] = sig
+        ctx.tokens[node.op_id] = sig.ravel()[:1]
     elif node.kind == "start":
         # origin-side wait for exposure signals: the epoch's puts are
         # armed by (tied to) the post counter as of this point
-        ctx.trig[node.window] = st[node.counter]
+        snap = st[node.counter]
+        for dep in node.deps:
+            snap = _tie(snap, ctx.tokens.get(dep))
+        ctx.trig[(node.window, node.epoch)] = snap
+        ctx.tokens[node.op_id] = snap.ravel()[:1]
     elif node.kind == "put":
         payload = st[node.src]
-        payload = _tie(payload, ctx.trig.get(node.window))
+        payload = _tie(payload, ctx.trig.get((node.window, node.epoch)))
         for dep in node.deps:
             payload = _tie(payload, ctx.tokens.get(dep))
         arrived = _ppermute(stream, payload, node.direction)
@@ -110,12 +160,19 @@ def emit_node(stream, node, st, ctx, *, with_chained=True):
     elif node.kind == "complete":
         pass        # epoch-close marker: deps were precomputed by passes
     elif node.kind == "wait":
-        # wait kernel: all subsequent reads of the window's data buffers
-        # depend on the completion counter
+        # wait kernel: all subsequent reads of the window's (this
+        # phase's) data buffers depend on the completion counter. The
+        # fence set comes from lowering (node.writes); prefix-matching is
+        # the fallback for hand-built programs.
         dep = st[node.counter]
-        for k in list(st.keys()):
-            if k.startswith(node.window + ".") and not k.endswith("_sig"):
-                st[k] = _tie(st[k], dep)
+        for d in node.deps:
+            dep = _tie(dep, ctx.tokens.get(d))
+        fence = node.writes or tuple(
+            k for k in st
+            if k.startswith(node.window + ".") and not is_counter_name(k))
+        for k in fence:
+            st[k] = _tie(st[k], dep)
+        ctx.tokens[node.op_id] = dep.ravel()[:1]
     else:
         raise ValueError(f"cannot emit node kind {node.kind!r}")
     return st
@@ -134,11 +191,16 @@ def run_compiled(stream, prog, state, donate=True):
     jfn = cache.get(ck)
     if jfn is None:
         spec = stream.state_spec()
+        # multi-stream schedules trace in a stream-interleaved topological
+        # order (program order within a stream; cross-stream ordering only
+        # where a real dependency edge ties it) so epoch e+1's post/put
+        # traffic interleaves epoch e's compute in the emitted program
+        order = stream_interleaved_order(prog)
 
         def seg_fn(*vals):
             st = dict(zip(keys, vals))
             ctx = _EmitCtx()
-            for node in prog.nodes:
+            for node in order:
                 st = emit_node(stream, node, st, ctx)
             return tuple(st[k] for k in keys)
 
@@ -172,7 +234,9 @@ def run_host(stream, prog, state):
         else:
             state = _dispatch_host(stream, node, state, unit="node")
         if node.kind in _BLOCKING:
-            jax.block_until_ready(jax.tree.leaves(state)[0])
+            # the host block the cost model charges t_sync for must
+            # fence EVERY buffer of the state tree, not just one leaf
+            jax.block_until_ready(state)
     return state
 
 

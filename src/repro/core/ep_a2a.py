@@ -180,10 +180,13 @@ def make_moe_a2a_kernels(cfg, axis, n_shards):
 
 
 def create_a2a_window(stream, *, batch, seq, d_model, expert_ff, e_l,
-                      dtype=jnp.float32, name="a2a"):
+                      dtype=jnp.float32, name="a2a", double_buffer=False):
     """Window with the (replicated) token block, this shard's expert
     weights, the partial-output/aux buffers, and one recv buffer per
-    peer shift of the aggregated-put combine."""
+    peer shift of the aggregated-put combine. ``double_buffer`` ping/
+    pongs the partial/aux sources AND the recv landing zones (plus the
+    counters) so layer e+1's expert compute and puts never touch the
+    buffers layer e's combine is still reading."""
     n = stream.grid_shape[0]
     tok = (batch, seq, d_model)
     bufs = {"x": (tok, dtype),
@@ -193,11 +196,15 @@ def create_a2a_window(stream, *, batch, seq, d_model, expert_ff, e_l,
             "wd": ((e_l, expert_ff, d_model), dtype),
             "partial": (tok, dtype), "paux": ((1,), jnp.float32),
             "out": (tok, dtype), "aux": ((1,), jnp.float32)}
+    db_names = ["partial", "paux"]
     for k in range(1, n):
         bufs[f"recvp{k}"] = (tok, dtype)
         bufs[f"recva{k}"] = ((1,), jnp.float32)
+        db_names += [f"recvp{k}", f"recva{k}"]
     topo = shifts_topology(n, stream.grid_axes)
-    return stream.create_window(name, bufs, list(topo.group), topology=topo)
+    return stream.create_window(name, bufs, list(topo.group), topology=topo,
+                                double_buffer=double_buffer,
+                                db_names=db_names)
 
 
 @register_pattern("a2a", grid_axes=("model",), default_grid=(2,),
@@ -205,11 +212,13 @@ def create_a2a_window(stream, *, batch, seq, d_model, expert_ff, e_l,
 def build_moe_a2a_program(stream, niter, *, cfg=None, batch=1, seq=8,
                           d_model=16, expert_ff=16, experts=None, top_k=2,
                           dtype=jnp.float32, merged=True, host_sync_every=0,
-                          kernels=None, name="a2a", **_kw):
+                          kernels=None, name="a2a", double_buffer=False,
+                          **_kw):
     """Enqueue ``niter`` expert-parallel MoE layers: post -> local
     gather/expert/scatter kernel -> start -> an aggregated put of the
     partial output (+ aux) to EVERY peer shift -> complete -> wait ->
     combine kernel. ``merged`` is schedule-level (signal fusion).
+    ``double_buffer`` alternates layers over ping/pong partial/recv sets.
     Returns (window, kernels)."""
     stream.pattern = stream.pattern or "a2a"
     n = stream.grid_shape[0]
@@ -225,22 +234,26 @@ def build_moe_a2a_program(stream, niter, *, cfg=None, batch=1, seq=8,
     e_l = cfg.moe.num_experts // n
     win = create_a2a_window(stream, batch=batch, seq=seq, d_model=d_model,
                             expert_ff=expert_ff, e_l=e_l, dtype=dtype,
-                            name=name)
+                            name=name, double_buffer=double_buffer)
     kernels = kernels or make_moe_a2a_kernels(cfg, stream.grid_axes[0], n)
-    q = win.qual
-    recvp = [q(f"recvp{k}") for k in range(1, n)]
-    recva = [q(f"recva{k}") for k in range(1, n)]
     for it in range(niter):
-        stream.post(win)
+        phase = it % 2 if double_buffer else 0
+
+        def q(b, _p=phase):
+            return win.qual(b, _p)
+
+        recvp = [q(f"recvp{k}") for k in range(1, n)]
+        recva = [q(f"recva{k}") for k in range(1, n)]
+        stream.post(win, phase=phase)
         stream.launch(kernels["moe_shard"],
                       [q("x"), q("router"), q("wg"), q("wu"), q("wd")],
                       [q("partial"), q("paux")], label="moe_shard")
-        stream.start(win)
+        stream.start(win, phase=phase)
         for k in range(1, n):
-            stream.put(win, q("partial"), q(f"recvp{k}"), (k,))
-            stream.put(win, q("paux"), q(f"recva{k}"), (k,))
-        stream.complete(win)
-        stream.wait(win)
+            stream.put(win, q("partial"), q(f"recvp{k}"), (k,), phase=phase)
+            stream.put(win, q("paux"), q(f"recva{k}"), (k,), phase=phase)
+        stream.complete(win, phase=phase)
+        stream.wait(win, phase=phase)
         stream.launch(kernels["combine"],
                       [q("partial"), q("paux")] + recvp + recva,
                       [q("out"), q("aux")], label="combine")

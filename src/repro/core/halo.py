@@ -150,30 +150,40 @@ def faces_topology(grid_axes=("x", "y", "z")) -> PatternTopology:
                            tuple(DIRECTIONS))
 
 
-def create_faces_window(stream, n, name="faces", extra_buffers=None):
+def create_faces_window(stream, n, name="faces", extra_buffers=None,
+                        double_buffer=False):
     """Window with: src block, halo recv buffer per direction, accumulator,
     and an iteration counter so kernels are iteration-independent (the host
-    baseline must not recompile per iteration)."""
+    baseline must not recompile per iteration). ``double_buffer`` gives
+    every send/recv surface (and the signal counters) a ping/pong pair so
+    alternating epochs never touch the same communication buffers."""
     bufs = {"src": (tuple(n), jnp.float32),
             "acc": (tuple(n), jnp.float32),
             "it": ((1,), jnp.float32),
             "res": ((1,), jnp.float32)}
+    db_names = []
     for d in DIRECTIONS:
         bufs[f"recv{d[0]}{d[1]}{d[2]}"] = ((surface_size(n, d),), jnp.float32)
         bufs[f"send{d[0]}{d[1]}{d[2]}"] = ((surface_size(n, d),), jnp.float32)
+        db_names += [f"recv{d[0]}{d[1]}{d[2]}", f"send{d[0]}{d[1]}{d[2]}"]
     if extra_buffers:
         bufs.update(extra_buffers)
     return stream.create_window(name, bufs, DIRECTIONS,
-                                topology=faces_topology(stream.grid_axes))
+                                topology=faces_topology(stream.grid_axes),
+                                double_buffer=double_buffer,
+                                db_names=db_names)
 
 
-def enqueue_faces_iteration(stream, win, n, kernels, merged=True):
+def enqueue_faces_iteration(stream, win, n, kernels, merged=True, phase=0):
     """One inner-loop Faces iteration (paper Fig. 9b structure):
     post -> increment kernel -> start -> 26 puts -> complete -> wait ->
     unpack+compare kernel. All enqueued; nothing executes until
-    synchronize(). `kernels` from make_faces_kernels(n)."""
-    q = win.qual
-    stream.post(win)
+    synchronize(). `kernels` from make_faces_kernels(n). ``phase`` picks
+    the ping/pong buffer+counter set on a double-buffered window."""
+    def q(b):
+        return win.qual(b, phase)
+
+    stream.post(win, phase=phase)
     stream.launch(kernels["increment"], [q("src"), q("it")],
                   [q("src"), q("it")], label="increment")
     # pack kernel(s): merged = ONE launch extracting all 26 surfaces
@@ -186,12 +196,12 @@ def enqueue_faces_iteration(stream, win, n, kernels, merged=True):
             stream.launch(kernels["packs"][d], [q("src")],
                           [q(f"send{d[0]}{d[1]}{d[2]}")],
                           label=f"pack{d}")
-    stream.start(win)
+    stream.start(win, phase=phase)
     for d in DIRECTIONS:
         stream.put(win, q(f"send{d[0]}{d[1]}{d[2]}"),
-                   q(f"recv{d[0]}{d[1]}{d[2]}"), d)
-    stream.complete(win)
-    stream.wait(win)
+                   q(f"recv{d[0]}{d[1]}{d[2]}"), d, phase=phase)
+    stream.complete(win, phase=phase)
+    stream.wait(win, phase=phase)
 
     names = [f"recv{d[0]}{d[1]}{d[2]}" for d in DIRECTIONS]
     if merged:
@@ -210,19 +220,25 @@ def enqueue_faces_iteration(stream, win, n, kernels, merged=True):
 
 def build_faces_program(stream, n, niter, merged=True, kernels=None,
                         host_sync_every=0, extra_buffers=None,
-                        overlap_kernel=None, name="faces"):
+                        overlap_kernel=None, name="faces",
+                        double_buffer=False):
     """Enqueue the FULL Faces benchmark program: window + kernels + niter
     inner-loop iterations. ``host_sync_every=k`` inserts an application-
     level host_sync() every k iterations (paper §5.2.1 throttling — each
     chunk becomes its own compiled segment). ``overlap_kernel`` enqueues
     an independent compute launch per iteration (paper §6.7); it runs on
-    a buffer from ``extra_buffers``. Returns (window, kernels)."""
+    a buffer from ``extra_buffers``. ``double_buffer`` alternates epochs
+    over ping/pong send/recv+counter sets so a multi-stream schedule
+    (``nstreams>1``) can run epoch e+1's transfers during epoch e's
+    compute. Returns (window, kernels)."""
     stream.pattern = stream.pattern or "faces"
     win = create_faces_window(stream, n, name=name,
-                              extra_buffers=extra_buffers)
+                              extra_buffers=extra_buffers,
+                              double_buffer=double_buffer)
     kernels = kernels or make_faces_kernels(n)
     for it in range(niter):
-        enqueue_faces_iteration(stream, win, n, kernels, merged=merged)
+        enqueue_faces_iteration(stream, win, n, kernels, merged=merged,
+                                phase=(it % 2 if double_buffer else 0))
         if overlap_kernel is not None:
             fn, buf = overlap_kernel
             stream.launch(fn, [win.qual(buf)], [win.qual(buf)],

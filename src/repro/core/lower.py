@@ -36,11 +36,12 @@ from repro.core.triggered import TriggeredOp, TriggeredProgram
 
 
 def buffer_nbytes(stream, qualified: str) -> int:
-    """Per-rank byte size of a window buffer like ``"faces.send101"``."""
+    """Per-rank byte size of a window buffer like ``"faces.send101"``
+    (pong keys resolve to their ping buffer's size)."""
     for win in stream.windows.values():
         prefix = win.name + "."
         if qualified.startswith(prefix):
-            base = qualified[len(prefix):]
+            base = win.base_buffer(qualified[len(prefix):])
             if base in win.buffers:
                 shape, dtype = win.buffers[base]
                 return int(np.prod(shape)) * np.dtype(dtype).itemsize
@@ -48,16 +49,26 @@ def buffer_nbytes(stream, qualified: str) -> int:
 
 
 def lower_segment(stream, seg) -> TriggeredProgram:
-    """Lower one segment of the deferred-op queue onto the IR."""
+    """Lower one segment of the deferred-op queue onto the IR.
+
+    Epoch indices are global across the segment; each op additionally
+    carries its ``phase`` (ping/pong parity chosen by the builder) so
+    double-buffered windows resolve counter slots and data buffers to the
+    right parity's set. A put's trigger threshold counts the epochs
+    closed on ITS parity's counter (== epoch+1 for single-buffered
+    windows)."""
     nodes: List[TriggeredOp] = []
     pending: Dict[str, List[TriggeredOp]] = {}   # window -> epoch's puts
     epoch = 0
+    closed: Dict[str, int] = {}          # window -> last closed epoch
+    nclosed: Dict[tuple, int] = {}       # (window, phase) -> epochs closed
+    last_dsts: Dict[str, tuple] = {}     # window -> last epoch's put dsts
 
     for op in seg:
         if op.kind == "kernel":
             nodes.append(TriggeredOp(
-                "kernel", fn=op.fn, reads=op.reads, writes=op.writes,
-                label=op.label))
+                "kernel", fn=op.fn, fn_token=op.fn_token, reads=op.reads,
+                writes=op.writes, label=op.label))
         elif op.kind == "post":
             win = op.window
             for d in win.group:
@@ -65,42 +76,58 @@ def lower_segment(stream, seg) -> TriggeredProgram:
                     "signal", window=win.name, role="post",
                     direction=tuple(d),
                     slot=win.opposite_index(d),
-                    counter=win.post_sig, wire=True,
+                    counter=win.post_sig_at(op.phase), wire=True,
+                    epoch=epoch, phase=op.phase,
                     label=f"post{tuple(d)}"))
         elif op.kind == "start":
             win = op.window
             nodes.append(TriggeredOp(
-                "start", window=win.name, counter=win.post_sig,
-                label=op.label))
+                "start", window=win.name,
+                counter=win.post_sig_at(op.phase),
+                epoch=epoch, phase=op.phase, label=op.label))
         elif op.kind == "put":
             win = op.window
             d = tuple(op.put["direction"])
             slot = win.opposite_index(d)
             chained = TriggeredOp(
                 "signal", window=win.name, role="completion",
-                direction=d, slot=slot, counter=win.comp_sig, wire=True,
-                label=f"comp{d}")
+                direction=d, slot=slot,
+                counter=win.comp_sig_at(op.phase), wire=True,
+                phase=op.phase, label=f"comp{d}")
             pending.setdefault(win.name, []).append(TriggeredOp(
                 "put", window=win.name, src=op.put["src"],
                 dst=op.put["dst"], direction=d,
                 nbytes=buffer_nbytes(stream, op.put["src"]),
-                trigger_counter=f"{win.post_sig}[{win.group.index(d)}]",
-                completion_counter=f"{win.comp_sig}[{slot}]",
-                chained=chained, label=f"put{d}"))
+                trigger_counter=(f"{win.post_sig_at(op.phase)}"
+                                 f"[{win.group.index(d)}]"),
+                completion_counter=f"{win.comp_sig_at(op.phase)}[{slot}]",
+                chained=chained, phase=op.phase, label=f"put{d}"))
         elif op.kind == "complete":
             win = op.window
-            for p in pending.pop(win.name, []):
+            arm = nclosed.get((win.name, op.phase % 2), 0)
+            flushed = pending.pop(win.name, [])
+            for p in flushed:
                 p.epoch = epoch
-                p.threshold = epoch + 1
+                p.threshold = arm + 1
                 p.chained.epoch = epoch
                 nodes.append(p)
             nodes.append(TriggeredOp(
-                "complete", window=win.name, epoch=epoch))
+                "complete", window=win.name, epoch=epoch, phase=op.phase))
+            closed[win.name] = epoch
+            nclosed[(win.name, op.phase % 2)] = arm + 1
+            last_dsts[win.name] = tuple(p.dst for p in flushed)
             epoch += 1
         elif op.kind == "wait":
             win = op.window
+            # the fence covers exactly what the epoch's puts delivered:
+            # readers of the received buffers must follow the wait, but
+            # compute state (src/accumulators) stays free to overlap on
+            # the compute stream
             nodes.append(TriggeredOp(
-                "wait", window=win.name, counter=win.comp_sig))
+                "wait", window=win.name,
+                counter=win.comp_sig_at(op.phase),
+                epoch=closed.get(win.name, 0), phase=op.phase,
+                writes=last_dsts.get(win.name, ())))
         else:
             raise ValueError(f"cannot lower op kind {op.kind!r}")
 
@@ -115,7 +142,9 @@ def lower_segment(stream, seg) -> TriggeredProgram:
 
     return TriggeredProgram(
         nodes=nodes, windows=dict(stream.windows),
-        meta={"pattern": getattr(stream, "pattern", "")})
+        meta={"pattern": getattr(stream, "pattern", ""),
+              "double_buffer": any(w.double_buffer
+                                   for w in stream.windows.values())})
 
 
 def split_segments(program) -> List[list]:

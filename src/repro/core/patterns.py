@@ -143,30 +143,38 @@ def build_pattern(stream, name: str, niter: int, **kw):
 def pattern_programs(name: str, niter: int, *, grid=None,
                      throttle: str = "adaptive", resources: int = 16,
                      merged: bool = True, ordered: bool = False,
-                     host_sync_every: int = 0, **build_kw):
+                     host_sync_every: int = 0, nstreams: int = 1,
+                     double_buffer: bool = False, **build_kw):
     """Lower+schedule a pattern on a device-free stream — the same
-    builder and passes the executors use, minus a mesh."""
+    builder and passes the executors use, minus a mesh. ``nstreams>1``
+    runs the stream-assignment pass (compute stream + communication
+    streams); ``double_buffer`` builds the program on ping/pong window
+    buffers so alternating epochs are conflict-free."""
     from repro.core.stream import STStream
 
     p = get_pattern(name)
     grid = tuple(grid) if grid is not None else p.default_grid
     stream = STStream(None, p.grid_axes, grid_shape=grid)
     p.build(stream, niter, merged=merged, host_sync_every=host_sync_every,
-            **build_kw)
+            double_buffer=double_buffer, **build_kw)
     return stream.scheduled_programs(throttle=throttle, resources=resources,
-                                     merged=merged, ordered=ordered)
+                                     merged=merged, ordered=ordered,
+                                     nstreams=nstreams)
 
 
 def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
                      resources: int = 16, merged: bool = True,
                      ordered: bool = False, host_orchestrated: bool = False,
-                     cm=None, grid=None, **build_kw) -> float:
+                     cm=None, grid=None, nstreams: int = 1,
+                     double_buffer: bool = False, **build_kw) -> float:
     """Derived critical-path time of ``niter`` pattern iterations.
 
     ``policy="application"`` (§5.2.1) splits the program every iteration
     and keeps the runtime's static weak-sync edges, so the Fig. 13
     ordering adaptive <= static <= application holds structurally for
-    EVERY pattern, exactly as for Faces."""
+    EVERY pattern, exactly as for Faces. ``nstreams``/``double_buffer``
+    select the overlapped multi-stream schedule (the simulator walks one
+    timeline per stream)."""
     from repro.core.throttle import simulate_pipeline
 
     host_sync_every = 1 if policy == "application" else 0
@@ -174,5 +182,7 @@ def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
     progs = pattern_programs(name, niter, grid=grid, throttle=throttle,
                              resources=resources, merged=merged,
                              ordered=ordered,
-                             host_sync_every=host_sync_every, **build_kw)
+                             host_sync_every=host_sync_every,
+                             nstreams=nstreams, double_buffer=double_buffer,
+                             **build_kw)
     return simulate_pipeline(progs, cm, host_orchestrated)

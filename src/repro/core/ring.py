@@ -181,10 +181,13 @@ def make_ring_kernels(axis, n, seq_per_rank, head_dim, causal=True,
 
 
 def create_ring_window(stream, *, batch, seq_per_rank, heads, head_dim,
-                       dtype=jnp.float32, name="ring"):
+                       dtype=jnp.float32, name="ring",
+                       double_buffer=False):
     """Window with the local Q block, the rotating KV double buffers, the
     f32 flash-merge accumulators, and a step counter (so the attend
-    kernel is iteration-independent, like Faces' "it")."""
+    kernel is iteration-independent, like Faces' "it").
+    ``double_buffer`` ping/pongs the recv landing zones (and counters) so
+    adjacent ring steps' transfers never collide."""
     blk = (batch, seq_per_rank, heads, head_dim)
     bufs = {"q": (blk, dtype), "k": (blk, dtype), "v": (blk, dtype),
             "recvk": (blk, dtype), "recvv": (blk, dtype),
@@ -194,7 +197,9 @@ def create_ring_window(stream, *, batch, seq_per_rank, heads, head_dim,
             "step": ((1,), jnp.int32),
             "out": (blk, dtype)}
     topo = ring_topology(stream.grid_axes)
-    return stream.create_window(name, bufs, list(topo.group), topology=topo)
+    return stream.create_window(name, bufs, list(topo.group), topology=topo,
+                                double_buffer=double_buffer,
+                                db_names=("recvk", "recvv"))
 
 
 @register_pattern("ring", grid_axes=("data",), default_grid=(4,),
@@ -202,36 +207,41 @@ def create_ring_window(stream, *, batch, seq_per_rank, heads, head_dim,
 def build_ring_program(stream, niter, *, batch=1, seq_per_rank=8, heads=2,
                        head_dim=8, causal=True, dtype=jnp.float32,
                        merged=True, host_sync_every=0, kernels=None,
-                       name="ring", **_kw):
+                       name="ring", double_buffer=False, **_kw):
     """Enqueue ``niter`` full ring-attention rotations: per ring step one
     access epoch — post -> attend kernel (overlap launch) -> start ->
     put(k)/put(v) on the +1 direction -> complete -> wait -> rotate
     kernel — then a finalize kernel. ``merged`` is schedule-level for
     this pattern (signal fusion); the builder's epoch structure is
-    identical either way. Returns (window, kernels)."""
+    identical either way. ``double_buffer`` alternates ring steps over
+    ping/pong recv+counter sets. Returns (window, kernels)."""
     stream.pattern = stream.pattern or "ring"
     n = stream.grid_shape[0]
     axis = stream.grid_axes[0]
     win = create_ring_window(stream, batch=batch, seq_per_rank=seq_per_rank,
                              heads=heads, head_dim=head_dim, dtype=dtype,
-                             name=name)
+                             name=name, double_buffer=double_buffer)
     kernels = kernels or make_ring_kernels(axis, n, seq_per_rank, head_dim,
                                            causal=causal, dtype=dtype)
     q = win.qual
     accs = [q("m"), q("l"), q("acc"), q("step")]
+    ep = 0
     for it in range(niter):
         stream.launch(kernels["reset"], accs, accs, label="reset")
         for _ in range(n):
-            stream.post(win)
+            phase = ep % 2 if double_buffer else 0
+            ep += 1
+            stream.post(win, phase=phase)
             stream.launch(kernels["attend"],
                           [q("q"), q("k"), q("v")] + accs, accs,
                           label="attend")
-            stream.start(win)
-            stream.put(win, q("k"), q("recvk"), (1,))
-            stream.put(win, q("v"), q("recvv"), (1,))
-            stream.complete(win)
-            stream.wait(win)
-            stream.launch(kernels["rotate"], [q("recvk"), q("recvv")],
+            stream.start(win, phase=phase)
+            stream.put(win, q("k"), q("recvk", phase), (1,), phase=phase)
+            stream.put(win, q("v"), q("recvv", phase), (1,), phase=phase)
+            stream.complete(win, phase=phase)
+            stream.wait(win, phase=phase)
+            stream.launch(kernels["rotate"],
+                          [q("recvk", phase), q("recvv", phase)],
                           [q("k"), q("v")], label="rotate")
         stream.launch(kernels["finalize"], [q("acc"), q("l")], [q("out")],
                       label="finalize")

@@ -26,8 +26,23 @@ Passes
         host_sync() program splits at lowering time;
       - "none" places no edges (infinite slots).
     Always records the ResourcePool high-water mark in program meta.
+  * :func:`assign_streams` — multi-stream overlap (paper §2/§6.7: the
+    separate communication stream is what lets the NIC move epoch e+1's
+    bytes while the device computes epoch e): partition the DAG onto a
+    compute stream (stream 0, all kernels) and one or more communication
+    streams (post/start/put/complete/wait, round-robin by epoch).
+    Program order is kept only WITHIN a stream; every cross-stream
+    ordering the single-stream program encoded positionally becomes an
+    explicit dependency edge derived from buffer conflicts (RAW/WAR/WAW
+    on window buffers and counters), so any emission order that respects
+    the edges — see :func:`stream_interleaved_order` — reproduces the
+    single-stream values bit-for-bit.
+  * :func:`validate_deps` — every dependency edge must name an op_id of
+    a node in the same program; dangling edges (e.g. referencing a put
+    in a previous host_sync segment) raise here instead of being
+    silently treated as complete by the simulator.
 
-:func:`schedule` is the driver applying all three in order.
+:func:`schedule` is the driver applying the passes in order.
 """
 from __future__ import annotations
 
@@ -53,12 +68,13 @@ def fuse_signals(prog: TriggeredProgram, merged: bool) -> TriggeredProgram:
             group = []
             while (j < len(nodes) and nodes[j].kind == "signal"
                    and nodes[j].role == "post"
-                   and nodes[j].window == n.window):
+                   and nodes[j].window == n.window
+                   and nodes[j].counter == n.counter):
                 group.append(nodes[j])
                 j += 1
             fused_nodes.append(TriggeredOp(
                 "signal", window=n.window, role="post", counter=n.counter,
-                fused=True,
+                fused=True, epoch=n.epoch, phase=n.phase,
                 slots=tuple((g.slot, g.direction) for g in group),
                 label=f"post_merged[{len(group)}]"))
             i = j
@@ -133,11 +149,137 @@ def throttle_pass(prog: TriggeredProgram, policy: str,
     return prog
 
 
+# ---------------------------------------------------------------------------
+# stream assignment (multi-stream overlap)
+# ---------------------------------------------------------------------------
+
+def _accesses(n: TriggeredOp):
+    """(reads, writes) state-buffer sets of one descriptor — the conflict
+    footprint assign_streams turns into cross-stream dependency edges.
+    Counter bumps are read-modify-write; a wait reads its completion
+    counter and fences (reads+writes) the buffers its epoch's puts
+    delivered (node.writes from lowering) — NOT the window's compute
+    state, which stays free to overlap."""
+    if n.kind == "kernel":
+        return set(n.reads), set(n.writes)
+    if n.kind == "signal":
+        return {n.counter}, {n.counter}
+    if n.kind == "start":
+        return {n.counter}, set()
+    if n.kind == "put":
+        reads, writes = {n.src}, {n.dst}
+        if n.chained is not None:
+            reads.add(n.chained.counter)
+            writes.add(n.chained.counter)
+        return reads, writes
+    if n.kind == "wait":
+        fence = set(n.writes)
+        return {n.counter} | fence, fence
+    return set(), set()          # "complete" is a marker
+
+
+def assign_streams(prog: TriggeredProgram,
+                   nstreams: int = 1) -> TriggeredProgram:
+    """Partition the DAG onto a compute stream and communication streams.
+
+    Kernels stay on stream 0; every protocol/transfer descriptor of epoch
+    e moves to communication stream ``1 + e % (nstreams-1)``. Ordering
+    between two ops is kept ONLY when they share a stream (program order)
+    — every cross-stream conflict (RAW/WAR/WAW on a buffer or counter)
+    becomes an explicit dependency edge, so emission order and the
+    simulator's per-stream timelines can overlap everything else."""
+    nstreams = max(1, int(nstreams))
+    prog.meta["nstreams"] = nstreams
+    for n in prog.nodes:
+        n.stream = 0
+    if nstreams == 1:
+        return prog
+    ncomm = nstreams - 1
+    for n in prog.nodes:
+        if n.kind != "kernel":
+            n.stream = 1 + (n.epoch % ncomm)
+
+    last_writer = {}                       # buffer -> op_id
+    readers = defaultdict(list)            # buffer -> op_ids since write
+    stream_of = {}
+    for n in prog.nodes:
+        reads, writes = _accesses(n)
+        edges = []
+        for b in sorted(reads | writes):
+            w = last_writer.get(b)
+            if w is not None and stream_of[w] != n.stream:
+                edges.append(w)
+        for b in sorted(writes):
+            for r in readers[b]:
+                if stream_of[r] != n.stream:
+                    edges.append(r)
+        if edges:
+            n.deps = tuple(dict.fromkeys(n.deps + tuple(edges)))
+        stream_of[n.op_id] = n.stream
+        for b in writes:
+            last_writer[b] = n.op_id
+            readers[b] = []
+        for b in reads:
+            readers[b].append(n.op_id)
+    return prog
+
+
+def stream_interleaved_order(prog: TriggeredProgram):
+    """Topological emission order interleaving the streams round-robin:
+    within a stream program order is preserved; a node is emitted once
+    every dependency edge it carries has been emitted. For single-stream
+    programs this is exactly ``prog.nodes``."""
+    streams = sorted({n.stream for n in prog.nodes})
+    if len(streams) <= 1:
+        return list(prog.nodes)
+    queues = {s: [n for n in prog.nodes if n.stream == s] for s in streams}
+    heads = {s: 0 for s in streams}
+    emitted = set()
+    order = []
+    while len(order) < len(prog.nodes):
+        progressed = False
+        for s in streams:
+            i = heads[s]
+            if i >= len(queues[s]):
+                continue
+            node = queues[s][i]
+            if all(d in emitted for d in node.deps):
+                order.append(node)
+                emitted.add(node.op_id)
+                heads[s] = i + 1
+                progressed = True
+        if not progressed:
+            raise RuntimeError(
+                "stream_interleaved_order: cyclic or forward dependency "
+                "edges — the schedule passes emitted a non-DAG")
+    return order
+
+
+def validate_deps(prog: TriggeredProgram) -> TriggeredProgram:
+    """Every dependency edge must name an op_id present in this program.
+
+    A dangling edge (a put from a previous host_sync segment, or a buggy
+    pass emitting a stale op_id) would otherwise be silently treated as
+    completed-at-t0 by the simulator and as a no-op tie by the compiled
+    executor."""
+    known = {n.op_id for n in prog.nodes}
+    bad = [(n.kind, n.label or n.op_id, d)
+           for n in prog.nodes for d in n.deps if d not in known]
+    if bad:
+        raise ValueError(
+            "dangling dependency edges (op_ids not in this program): "
+            f"{bad[:5]}{'...' if len(bad) > 5 else ''} — deps must name "
+            "ops in the same host_sync segment")
+    return prog
+
+
 def schedule(prog: TriggeredProgram, *, throttle: str = "adaptive",
              resources: int = 64, merged: bool = True,
-             ordered: bool = False) -> TriggeredProgram:
+             ordered: bool = False, nstreams: int = 1) -> TriggeredProgram:
     """Apply all schedule passes; returns the same (mutated) program."""
     prog = fuse_signals(prog, merged)
     prog = ordering_pass(prog, ordered)
     prog = throttle_pass(prog, throttle, resources)
+    prog = assign_streams(prog, nstreams)
+    prog = validate_deps(prog)
     return prog

@@ -32,6 +32,7 @@ branches.
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -53,15 +54,21 @@ class _Op:
     kind: str
     window: Optional[STWindow] = None
     fn: Optional[Callable] = None
+    # monotonic per-stream identity of fn, assigned at launch(): id(fn)
+    # can be reused by a fresh closure after the old one is collected,
+    # which would silently hit stale _sched_cache/_compiled_cache entries
+    fn_token: int = -1
     reads: Tuple[str, ...] = ()
     writes: Tuple[str, ...] = ()
     put: Optional[dict] = None
+    phase: int = 0            # ping/pong parity (double-buffered windows)
     label: str = ""
 
     def cache_key(self):
         put = (tuple(sorted(self.put.items())) if self.put else None)
-        return (self.kind, id(self.fn), self.reads, self.writes, put,
-                self.window.name if self.window else None, self.label)
+        return (self.kind, self.fn_token, self.reads, self.writes, put,
+                self.window.name if self.window else None, self.phase,
+                self.label)
 
 
 class STStream:
@@ -91,11 +98,18 @@ class STStream:
         self.windows: Dict[str, STWindow] = {}
         self._perm_cache: Dict[tuple, list] = {}
         self._sched_cache: Dict[tuple, List[TriggeredProgram]] = {}
+        # fn identity tokens: keyed by the function OBJECT (a strong ref,
+        # so a collected closure can never alias a live token) and drawn
+        # from a never-reset monotonic counter
+        self._fn_tokens: Dict[Callable, int] = {}
+        self._fn_token_counter = itertools.count()
 
     # -- window management --------------------------------------------------
-    def create_window(self, name, buffers, group, topology=None) -> STWindow:
+    def create_window(self, name, buffers, group, topology=None,
+                      double_buffer=False, db_names=()) -> STWindow:
         win = STWindow(name=name, buffers=buffers, group=list(group),
-                       topology=topology)
+                       topology=topology, double_buffer=double_buffer,
+                       db_names=tuple(db_names))
         self.windows[name] = win
         return win
 
@@ -114,25 +128,32 @@ class STStream:
 
     # -- enqueue API (returns immediately: deferred execution) ---------------
     def launch(self, fn, reads, writes, label="kernel"):
-        self.program.append(_Op("kernel", fn=fn, reads=tuple(reads),
-                                writes=tuple(writes), label=label))
+        tok = self._fn_tokens.get(fn)
+        if tok is None:
+            tok = self._fn_tokens[fn] = next(self._fn_token_counter)
+        self.program.append(_Op("kernel", fn=fn, fn_token=tok,
+                                reads=tuple(reads), writes=tuple(writes),
+                                label=label))
 
-    def post(self, win: STWindow):
-        self.program.append(_Op("post", window=win))
+    def post(self, win: STWindow, phase: int = 0):
+        self.program.append(_Op("post", window=win, phase=phase))
 
-    def start(self, win: STWindow, mode: str = "MPIX_MODE_STREAM"):
-        self.program.append(_Op("start", window=win, label=mode))
+    def start(self, win: STWindow, mode: str = "MPIX_MODE_STREAM",
+              phase: int = 0):
+        self.program.append(_Op("start", window=win, phase=phase,
+                                label=mode))
 
-    def put(self, win: STWindow, src: str, dst: str, direction):
-        self.program.append(_Op("put", window=win,
+    def put(self, win: STWindow, src: str, dst: str, direction,
+            phase: int = 0):
+        self.program.append(_Op("put", window=win, phase=phase,
                                 put=dict(src=src, dst=dst,
                                          direction=tuple(direction))))
 
-    def complete(self, win: STWindow):
-        self.program.append(_Op("complete", window=win))
+    def complete(self, win: STWindow, phase: int = 0):
+        self.program.append(_Op("complete", window=win, phase=phase))
 
-    def wait(self, win: STWindow):
-        self.program.append(_Op("wait", window=win))
+    def wait(self, win: STWindow, phase: int = 0):
+        self.program.append(_Op("wait", window=win, phase=phase))
 
     def host_sync(self):
         """Application-level throttling point (paper §5.2.1)."""
@@ -142,26 +163,36 @@ class STStream:
         self.program = []
         self.pattern = ""       # a rebuild may enqueue a different pattern
         self._sched_cache.clear()
-        # jitted-executable caches key on id(fn) of kernel closures; a
-        # rebuild creates fresh closures, so stale entries would pin old
-        # programs and executables forever
+        # release the closure refs; the token COUNTER is never reset, so
+        # a closure created after clear() can never alias a stale
+        # _sched_cache/_compiled_cache entry even if id() is reused
+        self._fn_tokens.clear()
         for cache in ("_compiled_cache", "_host_cache"):
             if hasattr(self, cache):
                 getattr(self, cache).clear()
 
     # -- neighbor permutation -------------------------------------------------
+    def rank_strides(self) -> tuple:
+        """Row-major strides of the grid-coordinate -> linear-rank map.
+        The SINGLE definition of rank linearization: perm_for and the
+        executors' traced axis_index lookups both derive from it."""
+        strides, acc = [], 1
+        for n in reversed(self.grid_shape):
+            strides.append(acc)
+            acc *= n
+        return tuple(reversed(strides))
+
     def perm_for(self, direction: tuple) -> list:
         if direction in self._perm_cache:
             return self._perm_cache[direction]
         dims = self.grid_shape
         nd = len(dims)
         d = tuple(direction) + (0,) * (nd - len(direction))
+        strides = self.rank_strides()
 
         def lin(coord):
-            idx = 0
-            for c, n in zip(coord, dims):
-                idx = idx * n + (c % n)
-            return idx
+            return sum((c % n) * s
+                       for c, n, s in zip(coord, dims, strides))
 
         pairs = []
         for src in np.ndindex(*dims):
@@ -182,18 +213,20 @@ class STStream:
     # -- compile pipeline: lower (1) + schedule (2) ---------------------------
     def scheduled_programs(self, *, throttle: str = "adaptive",
                            resources: int = 64, merged: bool = True,
-                           ordered: bool = False) -> List[TriggeredProgram]:
+                           ordered: bool = False,
+                           nstreams: int = 1) -> List[TriggeredProgram]:
         """Lower the op queue and run the schedule passes; one scheduled
         descriptor DAG per host_sync-delimited segment. Cached per
         (queue, options) so repeated synchronize calls reuse programs
         (and therefore compiled executables)."""
         key = (tuple(op.cache_key() for op in self.program),
-               throttle, resources, merged, ordered)
+               throttle, resources, merged, ordered, nstreams)
         progs = self._sched_cache.get(key)
         if progs is None:
             progs = [
                 schedule(lower_segment(self, seg), throttle=throttle,
-                         resources=resources, merged=merged, ordered=ordered)
+                         resources=resources, merged=merged,
+                         ordered=ordered, nstreams=nstreams)
                 for seg in split_segments(self.program)]
             self._sched_cache[key] = progs
         return progs
@@ -201,7 +234,8 @@ class STStream:
     # -- execution: emit (3) ---------------------------------------------------
     def synchronize(self, state, mode: str = "st", throttle: str = "adaptive",
                     resources: int = 64, merged: bool = True,
-                    donate: bool = True, ordered: bool = False):
+                    donate: bool = True, ordered: bool = False,
+                    nstreams: int = 1):
         """Execute the enqueued program; returns the new state.
 
         mode="st": one compiled program, single host sync (this call).
@@ -212,14 +246,15 @@ class STStream:
                              "(constructed with mesh=None)")
         for prog in self.scheduled_programs(
                 throttle=throttle, resources=resources, merged=merged,
-                ordered=ordered):
+                ordered=ordered, nstreams=nstreams):
             if mode == "st":
                 state = backends.run_compiled(self, prog, state,
                                               donate=donate)
             else:
                 state = backends.run_host(self, prog, state)
-            # application-level sync between segments: full host block
-            jax.block_until_ready(jax.tree.leaves(state)[0])
+            # application-level sync between segments: a full host block
+            # must fence EVERY buffer, not just the first state leaf
+            jax.block_until_ready(state)
         return state
 
 

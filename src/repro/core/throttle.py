@@ -19,15 +19,22 @@ dispatch and kernel-launch costs dominate small-message halo exchange):
   t_signal   — tiny signal put                                 [us]
 
 Timeline model: the host enqueues every descriptor (t_dispatch each);
-the device executes kernels/signals in stream order; puts are offloaded
-(the device continues while the NIC moves bytes) and start no earlier
-than the completion of every dependency edge the schedule passes added.
+each device STREAM executes its kernels/signals/waits in program order
+on its own timeline (``t_dev[stream]`` — single-stream programs have
+exactly one); puts are offloaded (the issuing stream continues while the
+NIC moves bytes) and start no earlier than the completion of every
+dependency edge the schedule passes added; a wait kernel polls until its
+epoch's put completions have landed. Cross-stream ordering flows ONLY
+through dependency edges resolved in ``done`` — an edge naming an op_id
+outside the program raises instead of being treated as completed at t=0
+(dangling edges used to silently vanish here).
 ``host_orchestrated=True`` models the Fig. 9a baseline: the device waits
 for each dispatch and every epoch boundary (start/complete/wait) pays a
 full host round-trip.
 """
 from __future__ import annotations
 
+from collections import defaultdict
 from dataclasses import dataclass
 from typing import Dict, List, Sequence
 
@@ -52,53 +59,77 @@ def simulate_program(prog: TriggeredProgram, cm: CostModel = None,
     """Critical-path completion time (us) of one scheduled program."""
     cm = cm or CostModel()
     merged = bool(prog.meta.get("merged", True))
-    t_host = 0.0                     # host (dispatch) timeline
-    t_dev = 0.0                      # device/NIC stream timeline
-    done: Dict[int, float] = {}      # put op_id -> completion time
+    known = {n.op_id for n in prog.nodes}
+    t_host = 0.0                        # host (dispatch) timeline
+    t_dev: Dict[int, float] = defaultdict(float)   # per-stream timelines
+    done: Dict[int, float] = {}         # op_id -> completion time
+    comp_at: Dict[tuple, List[float]] = defaultdict(list)
+    #                                   (window, epoch) -> put completions
 
     def block(*extra):
-        nonlocal t_host, t_dev
-        t_host = max(t_host, t_dev, *extra) + cm.t_sync
-        t_dev = t_host
+        nonlocal t_host
+        t = max([t_host] + list(t_dev.values()) + list(extra)) + cm.t_sync
+        t_host = t
+        for s in list(t_dev):
+            t_dev[s] = t
+
+    def resolve(node, start):
+        for dep in node.deps:
+            if dep not in known:
+                raise ValueError(
+                    f"simulate_program: dependency edge {dep} of "
+                    f"{node.kind}/{node.label or node.op_id} names an op "
+                    "outside this program (dangling edge)")
+            start = max(start, done[dep])
+        return start
 
     for node in prog.nodes:
+        s = node.stream
         t_host += cm.t_dispatch
+        start = t_dev[s]
         if host_orchestrated:
-            t_dev = max(t_dev, t_host)
+            start = max(start, t_host)
+        start = resolve(node, start)
         if node.kind == "kernel":
-            t_dev += cm.t_launch
+            t_dev[s] = start + cm.t_launch
         elif node.kind == "signal":
             # post signals: one fused launch vs a launch per neighbor
-            t_dev += cm.t_signal if node.fused else cm.t_launch + cm.t_signal
+            t_dev[s] = start + (cm.t_signal if node.fused
+                                else cm.t_launch + cm.t_signal)
         elif node.kind == "put":
-            start = t_dev
-            for dep in node.deps:
-                start = max(start, done.get(dep, 0.0))
             end = start + cm.t_put(node.nbytes)
             comp = end
-            t_dev = start      # offloaded: the device stream continues
+            t_dev[s] = start   # offloaded: the issuing stream continues
             if node.chained is not None and node.chained.wire:
                 # §3.2 chained wire signal: its own tiny launch on the
-                # device stream plus a wire hop before completion lands
+                # issuing stream plus a wire hop before completion lands
                 if host_orchestrated:
                     t_host += cm.t_dispatch      # separate dispatch
-                t_dev += cm.t_launch + cm.t_signal
+                t_dev[s] += cm.t_launch + cm.t_signal
                 comp = end + cm.t_signal
             done[node.op_id] = comp
+            comp_at[(node.window, node.epoch)].append(comp)
+            continue
         elif node.kind == "start":
+            t_dev[s] = start
             if host_orchestrated:
                 block()
         elif node.kind == "complete":
-            if merged:
-                # merged completion-signal kernel for the epoch
-                t_dev += cm.t_signal
+            # merged completion-signal kernel for the epoch
+            t_dev[s] = start + (cm.t_signal if merged else 0.0)
             if host_orchestrated:
                 block(max(done.values(), default=0.0))
         elif node.kind == "wait":
-            t_dev += cm.t_launch
+            # the wait kernel polls the completion counter until its
+            # epoch's puts have landed — THE serialization point the
+            # multi-stream schedule confines to the communication stream
+            arrived = max(comp_at.get((node.window, node.epoch), [0.0]))
+            t_dev[s] = max(start, arrived) + cm.t_launch
             if host_orchestrated:
                 block()
-    return max(t_host, t_dev, max(done.values(), default=0.0))
+        done[node.op_id] = t_dev[s]
+    return max([t_host] + list(t_dev.values())
+               + list(done.values() or [0.0]))
 
 
 def simulate_pipeline(progs: Sequence[TriggeredProgram],

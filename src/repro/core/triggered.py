@@ -63,6 +63,9 @@ class TriggeredOp:
     label: str = ""
     # kernel payload
     fn: Any = None
+    fn_token: int = -1              # stream-assigned monotonic identity of
+    #                                 fn (id(fn) is reusable after GC and
+    #                                 must never key a cache)
     reads: Tuple[str, ...] = ()
     writes: Tuple[str, ...] = ()
     # put payload
@@ -71,6 +74,11 @@ class TriggeredOp:
     direction: Any = None
     nbytes: int = 0
     epoch: int = 0
+    phase: int = 0                  # ping/pong buffer parity (double-
+    #                                 buffered windows): which counter/data
+    #                                 buffer set this op's epoch uses
+    stream: int = 0                 # device stream (assign_streams pass):
+    #                                 0 = compute, >=1 = communication
     trigger_counter: str = ""       # named counter slot arming this op
     threshold: int = 1
     completion_counter: str = ""    # named counter slot bumped on completion
@@ -97,11 +105,12 @@ class TriggeredOp:
             deps = tuple(sorted((idx or {}).get(d, -1) for d in self.deps))
         chained = (self.chained.structural_key(idx, with_deps=False)
                    if self.chained is not None else None)
-        return (self.kind, self.window, self.label, id(self.fn),
+        return (self.kind, self.window, self.label, self.fn_token,
                 self.reads, self.writes, self.src, self.dst,
                 tuple(self.direction) if self.direction else None,
                 self.role, self.slot, tuple(self.slots), self.fused,
-                self.wire, self.counter, deps, chained)
+                self.wire, self.counter, deps, chained,
+                self.phase, self.stream)
 
 
 @dataclass
@@ -128,31 +137,38 @@ class TriggeredProgram:
     # -- descriptor statistics (surfaced via launch/report + benchmarks) ----
     def critical_path_depth(self) -> int:
         """Longest chain of descriptors: kernels/signals/waits execute
-        in-order on the device stream; puts are offloaded and serialize
-        only on their dependency edges; a wait joins the completions of
-        its window's puts; a chained signal adds one hop after its put."""
+        in-order on their assigned device stream (one per `stream` value);
+        puts are offloaded and serialize only on their dependency edges;
+        a wait joins the completions of its window's puts; a chained
+        signal adds one hop after its put. Cross-stream dependency edges
+        (assign_streams) join through the per-op depth table."""
         depth: Dict[int, int] = {}
         win_put_depth: Dict[str, int] = {}
-        stream_d = 0
+        stream_d: Dict[int, int] = {}
         maxd = 0
         for n in self.nodes:
+            base = stream_d.get(n.stream, 0)
+            for dep in n.deps:
+                base = max(base, depth.get(dep, 0))
             if n.kind == "put":
-                d = stream_d + 1
-                for dep in n.deps:
-                    d = max(d, depth.get(dep, 0) + 1)
+                d = base + 1
                 if n.chained is not None:
                     d += 1
                 depth[n.op_id] = d
                 win_put_depth[n.window] = max(
                     win_put_depth.get(n.window, 0), d)
             elif n.kind == "wait":
-                stream_d = max(stream_d + 1,
-                               win_put_depth.get(n.window, 0) + 1)
+                stream_d[n.stream] = max(
+                    base + 1, win_put_depth.get(n.window, 0) + 1)
+                depth[n.op_id] = stream_d[n.stream]
             elif n.kind in ("kernel", "signal"):
-                stream_d += 1
-            # "start"/"complete" are markers: no device work
-            maxd = max(maxd, stream_d,
-                       depth.get(n.op_id, 0) if n.kind == "put" else 0)
+                stream_d[n.stream] = base + 1
+                depth[n.op_id] = stream_d[n.stream]
+            else:
+                # "start"/"complete" are markers: no device work
+                depth[n.op_id] = base
+            maxd = max(maxd, stream_d.get(n.stream, 0),
+                       depth.get(n.op_id, 0))
         return maxd
 
     def stats(self) -> Dict[str, Any]:
@@ -174,6 +190,8 @@ class TriggeredProgram:
             "throttle": self.meta.get("throttle", "none"),
             "merged": self.meta.get("merged", True),
             "pattern": self.meta.get("pattern", ""),
+            "nstreams": self.meta.get("nstreams", 1),
+            "double_buffer": self.meta.get("double_buffer", False),
         }
 
 

@@ -10,13 +10,29 @@ counters the runtime uses for epoch management:
 Counter buffers are int32 (num_peers,) slots per rank. On the mesh, a rank
 is one device of the process grid; buffers carry a leading rank dimension
 sharded over all grid axes (shard_map gives each device its local block).
+
+Double buffering (``double_buffer=True``): the window allocates ping/pong
+copies of its communication buffers (``db_names``) AND of both signal
+counters, so the post→put→wait chain of epoch *e+1* (pong set) never
+touches the buffers epoch *e* (ping set) is still reading — the structural
+prerequisite for the multi-stream overlap schedule (assign_streams).
+Pong buffers are the ping name plus the ``PONG`` suffix; ``qual`` and the
+``*_sig_at`` accessors resolve a (buffer, epoch-parity) pair to the right
+concrete state key.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, Sequence, Tuple
 
 import jax.numpy as jnp
+
+PONG = "__pp"       # state-key suffix of the pong (odd-parity) buffer set
+
+
+def is_counter_name(key: str) -> bool:
+    """True for post/comp signal-counter state keys, either parity."""
+    return key.endswith("_sig") or key.endswith("_sig" + PONG)
 
 
 @dataclass
@@ -27,6 +43,10 @@ class STWindow:
     # per-pattern direction algebra (repro.core.patterns.PatternTopology);
     # None falls back to component negation (the Faces convention)
     topology: object = None
+    # ping/pong sets: db_names lists the data buffers that get a pong
+    # copy; the signal counters are always duplicated when double_buffer
+    double_buffer: bool = False
+    db_names: Tuple[str, ...] = field(default_factory=tuple)
 
     def opposite_index(self, direction) -> int:
         """Counter slot on the TARGET rank that traffic sent in
@@ -46,11 +66,31 @@ class STWindow:
     def comp_sig(self) -> str:
         return f"{self.name}.comp_sig"
 
+    def _phased(self, base: str, phase: int) -> str:
+        if self.double_buffer and phase % 2:
+            return base + PONG
+        return base
+
+    def post_sig_at(self, phase: int = 0) -> str:
+        return self._phased(self.post_sig, phase)
+
+    def comp_sig_at(self, phase: int = 0) -> str:
+        return self._phased(self.comp_sig, phase)
+
     def counter_names(self):
-        return [self.post_sig, self.comp_sig]
+        names = [self.post_sig, self.comp_sig]
+        if self.double_buffer:
+            names += [self.post_sig + PONG, self.comp_sig + PONG]
+        return names
 
     def buffer_names(self):
         return list(self.buffers)
+
+    def base_buffer(self, bname: str) -> str:
+        """Strip the pong suffix off a buffer base name."""
+        if bname.endswith(PONG):
+            return bname[:-len(PONG)]
+        return bname
 
     def allocate(self, num_ranks: int) -> Dict[str, jnp.ndarray]:
         """Materialize global buffers: (num_ranks, *local_shape)."""
@@ -58,10 +98,18 @@ class STWindow:
         for bname, (shape, dtype) in self.buffers.items():
             state[f"{self.name}.{bname}"] = jnp.zeros(
                 (num_ranks,) + tuple(shape), dtype)
+            if self.double_buffer and bname in self.db_names:
+                state[f"{self.name}.{bname}{PONG}"] = jnp.zeros(
+                    (num_ranks,) + tuple(shape), dtype)
         npeers = max(len(self.group), 1)
-        state[self.post_sig] = jnp.zeros((num_ranks, npeers), jnp.int32)
-        state[self.comp_sig] = jnp.zeros((num_ranks, npeers), jnp.int32)
+        for cname in self.counter_names():
+            state[cname] = jnp.zeros((num_ranks, npeers), jnp.int32)
         return state
 
-    def qual(self, bname: str) -> str:
+    def qual(self, bname: str, phase: int = 0) -> str:
+        """Qualified state key of ``bname`` for an epoch of the given
+        parity; non-double-buffered names resolve to the ping key for
+        every phase."""
+        if self.double_buffer and phase % 2 and bname in self.db_names:
+            return f"{self.name}.{bname}{PONG}"
         return f"{self.name}.{bname}"

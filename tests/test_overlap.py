@@ -1,0 +1,381 @@
+"""Multi-stream overlap scheduling (assign_streams + double-buffered
+windows) and the executor/simulator fidelity fixes that rode along:
+
+  * stream partition + cross-stream conflict edges + interleaved
+    topological emission order,
+  * double-buffered lowering (ping/pong buffer and counter sets,
+    per-phase trigger thresholds),
+  * the overlap cost invariant (nstreams=2 + double_buffer derived cost
+    <= single-stream) for every registered pattern,
+  * dangling dependency edges raise at schedule time AND in the
+    simulator (previously silently treated as completed at t=0),
+  * host blocking fences the WHOLE state tree (not just the first leaf),
+  * fn identity tokens replace GC-reusable id(fn) in cache keys,
+  * non-periodic grids: boundary ranks get zero-filled arrivals and the
+    signal counters reconcile with the permutation's edge set,
+  * executor equivalence: nstreams>1 + double_buffer stays bit-identical
+    to the single-stream schedule through run_compiled AND run_host for
+    faces/ring/a2a (multi-device, in a subprocess).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core import (CostModel, STStream, available_patterns, halo,
+                        pattern_programs, simulate_pattern,
+                        simulate_program, stream_interleaved_order,
+                        validate_deps)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SIZE_KW = {"faces": dict(n=(4, 4, 4))}
+
+
+# ---------------------------------------------------------------------------
+# assign_streams: partition + cross-stream edges
+# ---------------------------------------------------------------------------
+
+def _prog(pat="faces", niter=2, nstreams=1, double_buffer=False, **kw):
+    kw = dict(SIZE_KW.get(pat, {}), **kw)
+    progs = pattern_programs(pat, niter, throttle="adaptive", resources=8,
+                             nstreams=nstreams, double_buffer=double_buffer,
+                             **kw)
+    assert len(progs) == 1
+    return progs[0]
+
+
+def test_single_stream_assignment_is_identity():
+    base = _prog(nstreams=1)
+    assert all(n.stream == 0 for n in base.nodes)
+    assert base.meta["nstreams"] == 1
+    assert stream_interleaved_order(base) == base.nodes
+
+
+def test_stream_partition_compute_vs_comm():
+    prog = _prog(nstreams=2, double_buffer=True)
+    for n in prog.nodes:
+        if n.kind == "kernel":
+            assert n.stream == 0
+        else:
+            assert n.stream == 1
+    assert prog.meta["nstreams"] == 2
+
+
+def test_three_streams_round_robin_by_epoch():
+    prog = _prog(nstreams=3, double_buffer=True)
+    for n in prog.nodes:
+        if n.kind != "kernel":
+            assert n.stream == 1 + n.epoch % 2, (n.kind, n.epoch, n.stream)
+
+
+def test_cross_stream_edges_express_program_order():
+    """Puts depend on the pack kernel that wrote their source; the unpack
+    kernel depends on its epoch's wait — the orderings the single-stream
+    program encoded positionally."""
+    prog = _prog(nstreams=2, double_buffer=True)
+    ids = {n.op_id: n for n in prog.nodes}
+    packs = [n for n in prog.nodes if n.label == "pack_merged"]
+    waits = [n for n in prog.nodes if n.kind == "wait"]
+    unpacks = [n for n in prog.nodes if n.label == "unpack_merged"]
+    for e, pack in enumerate(packs):
+        epoch_puts = [p for p in prog.puts() if p.epoch == e]
+        assert epoch_puts
+        for p in epoch_puts:
+            assert pack.op_id in p.deps
+        assert waits[e].op_id in unpacks[e].deps
+    # every dep names an op in the program (validate_deps already ran)
+    for n in prog.nodes:
+        for d in n.deps:
+            assert d in ids
+
+
+def test_interleaved_order_is_topological_and_stream_ordered():
+    prog = _prog(nstreams=3, double_buffer=True)
+    order = stream_interleaved_order(prog)
+    assert sorted(n.op_id for n in order) == \
+        sorted(n.op_id for n in prog.nodes)
+    pos = {n.op_id: i for i, n in enumerate(order)}
+    for n in prog.nodes:
+        for d in n.deps:
+            assert pos[d] < pos[n.op_id]
+    by_stream = {}
+    for n in prog.nodes:        # program order within each stream
+        by_stream.setdefault(n.stream, []).append(n.op_id)
+    for s, idsq in by_stream.items():
+        assert [p for p in (pos[i] for i in idsq)] == \
+            sorted(pos[i] for i in idsq)
+
+
+# ---------------------------------------------------------------------------
+# double-buffered lowering
+# ---------------------------------------------------------------------------
+
+def test_double_buffer_alternates_buffers_and_counters():
+    prog = _prog(niter=4, nstreams=1, double_buffer=True)
+    assert prog.meta["double_buffer"]
+    for p in prog.puts():
+        pong = p.epoch % 2 == 1
+        assert p.src.endswith("__pp") == pong
+        assert p.dst.endswith("__pp") == pong
+        assert ("post_sig__pp" in p.trigger_counter) == pong
+        assert ("comp_sig__pp" in p.completion_counter) == pong
+        # threshold counts epochs closed on THIS parity's counter
+        assert p.threshold == p.epoch // 2 + 1
+    waits = [n for n in prog.nodes if n.kind == "wait"]
+    for e, w in enumerate(waits):
+        assert w.counter.endswith("__pp") == (e % 2 == 1)
+        assert w.writes      # explicit fence set from lowering
+
+
+def test_double_buffer_allocates_pong_sets():
+    stream = STStream(None, ("x", "y", "z"), grid_shape=(2, 2, 2))
+    win, _ = halo.build_faces_program(stream, (4, 4, 4), 2,
+                                      double_buffer=True)
+    state = win.allocate(8)
+    assert "faces.send101__pp" in state and "faces.recv101__pp" in state
+    assert "faces.post_sig__pp" in state and "faces.comp_sig__pp" in state
+    assert "faces.src__pp" not in state      # compute state is not pong'd
+    assert state["faces.send101__pp"].shape == state["faces.send101"].shape
+
+
+# ---------------------------------------------------------------------------
+# the overlap cost invariant (also asserted by run.py --check-invariants)
+# ---------------------------------------------------------------------------
+
+def test_overlapped_derived_cost_not_worse_any_pattern():
+    for pat in available_patterns():
+        kw = SIZE_KW.get(pat, {})
+        single = simulate_pattern(pat, 4, policy="adaptive", resources=8,
+                                  cm=CostModel(), **kw)
+        for ns in (2, 3):
+            over = simulate_pattern(pat, 4, policy="adaptive", resources=8,
+                                    nstreams=ns, double_buffer=True,
+                                    cm=CostModel(), **kw)
+            assert over <= single + 1e-9, (pat, ns, over, single)
+
+
+def test_two_streams_strictly_beat_one_on_faces():
+    """The comm-stream offload must actually shorten the critical path
+    (signals/waits leave the compute stream), not just tie it."""
+    kw = SIZE_KW["faces"]
+    single = simulate_pattern("faces", 4, policy="adaptive", resources=8,
+                              **kw)
+    over = simulate_pattern("faces", 4, policy="adaptive", resources=8,
+                            nstreams=2, double_buffer=True, **kw)
+    assert over < single
+
+
+# ---------------------------------------------------------------------------
+# dangling dependency edges fail loudly (schedule time + simulator)
+# ---------------------------------------------------------------------------
+
+def test_validate_deps_rejects_dangling_edges():
+    prog = _prog()
+    prog.puts()[0].deps += (10 ** 9,)
+    with pytest.raises(ValueError, match="dangling"):
+        validate_deps(prog)
+
+
+def test_simulator_raises_on_unknown_dep():
+    prog = _prog()
+    prog.puts()[-1].deps += (10 ** 9,)
+    with pytest.raises(ValueError, match="dangling"):
+        simulate_program(prog, CostModel())
+
+
+# ---------------------------------------------------------------------------
+# fn identity tokens (id(fn) reuse after GC must never alias a cache key)
+# ---------------------------------------------------------------------------
+
+def test_fn_tokens_are_stable_per_object_and_never_reused():
+    stream = STStream(None, ("x",), grid_shape=(2,))
+
+    def make_kernel():
+        def k(x):
+            return x
+        return k
+
+    k1 = make_kernel()
+    stream.launch(k1, ["w.a"], ["w.a"])
+    stream.launch(k1, ["w.a"], ["w.a"])
+    t1a, t1b = stream.program[0].fn_token, stream.program[1].fn_token
+    assert t1a == t1b                      # same object -> same token
+    k2 = make_kernel()
+    stream.launch(k2, ["w.a"], ["w.a"])
+    assert stream.program[2].fn_token != t1a
+    seen = {op.fn_token for op in stream.program}
+    stream.clear()
+    del k1, k2
+    k3 = make_kernel()                     # may reuse a freed id()
+    stream.launch(k3, ["w.a"], ["w.a"])
+    assert stream.program[0].fn_token not in seen
+    # the op cache key carries the token, so it cannot alias across the
+    # rebuild even when id(k3) == the collected id(k1)
+    assert stream.program[0].fn_token in stream.program[0].cache_key()
+
+
+def test_rebuilt_queue_gets_fresh_schedule_cache_entries():
+    stream = STStream(None, ("x", "y", "z"), grid_shape=(2, 2, 2))
+    halo.build_faces_program(stream, (4, 4, 4), 1)
+    a = stream.scheduled_programs(throttle="none")
+    stream.clear()
+    halo.build_faces_program(stream, (4, 4, 4), 1)
+    b = stream.scheduled_programs(throttle="none")
+    assert a is not b and a[0] is not b[0]
+
+
+# ---------------------------------------------------------------------------
+# host blocking fences the whole state tree
+# ---------------------------------------------------------------------------
+
+def test_host_block_fences_every_state_leaf(monkeypatch):
+    import jax
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("x",))
+    stream = STStream(mesh, ("x",), periodic=True)
+    win, _ = halo.build_faces_program(stream, (3, 3, 3), 1)
+    state = stream.allocate()
+    calls = []
+    real = jax.block_until_ready
+
+    def spy(tree):
+        calls.append(len(jax.tree.leaves(tree)))
+        return real(tree)
+
+    monkeypatch.setattr(jax, "block_until_ready", spy)
+    stream.synchronize(state, mode="host", throttle="none", donate=False)
+    nleaves = len(state)
+    assert calls, "host path never blocked"
+    # every block (epoch boundaries + final sync) covers the full tree
+    assert all(c == nleaves for c in calls), (calls, nleaves)
+
+
+# ---------------------------------------------------------------------------
+# non-periodic grids: boundary ranks, zero-filled arrivals, counters
+# ---------------------------------------------------------------------------
+
+NONPERIODIC_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    from repro.core import STStream, halo
+    from repro.launch.mesh import make_mesh
+
+    niter, n = 2, (3, 3, 3)
+    mesh = make_mesh((2, 2, 2), ("x", "y", "z"))
+
+    def run(mode):
+        stream = STStream(mesh, ("x", "y", "z"), periodic=False)
+        win, _ = halo.build_faces_program(stream, n, niter)
+        state = stream.allocate()
+        state = stream.synchronize(state, mode=mode, throttle="adaptive",
+                                   resources=8, donate=False)
+        return stream, win, state
+
+    stream, win, st_state = run("st")
+    _, _, host_state = run("host")
+    for k in sorted(st_state):
+        np.testing.assert_allclose(np.asarray(st_state[k]),
+                                   np.asarray(host_state[k]),
+                                   rtol=1e-6, err_msg=k)
+    print("OK st-host-equal")
+
+    # expected counters from the permutation's edge set: slot
+    # opposite_index(d) on rank r receives one bump per iteration IFF
+    # some source sends to r in direction d; boundary ranks' missing
+    # neighbors leave zero-filled slots
+    nranks = stream.num_ranks
+    expected = np.zeros((nranks, len(win.group)), np.int32)
+    for d in win.group:
+        slot = win.opposite_index(d)
+        for _, dst in stream.perm_for(tuple(d)):
+            expected[dst, slot] += niter
+    post = np.asarray(st_state["faces.post_sig"])
+    comp = np.asarray(st_state["faces.comp_sig"])
+    np.testing.assert_array_equal(post, expected)
+    np.testing.assert_array_equal(comp, expected)
+    assert (expected == 0).any(), "no boundary-suppressed slots?"
+    print("OK counters-reconcile")
+""")
+
+
+@pytest.mark.slow
+def test_nonperiodic_boundary_ranks_zero_filled_and_counters():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run([sys.executable, "-c", NONPERIODIC_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert r.stdout.count("OK") == 2
+
+
+# ---------------------------------------------------------------------------
+# executor equivalence: overlapped schedule is bit-identical through
+# run_compiled AND run_host for faces / ring / a2a
+# ---------------------------------------------------------------------------
+
+EQUIV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    from repro.core import STStream, get_pattern
+    from repro.launch.mesh import make_mesh
+
+    CASES = [
+        ("faces", (2, 2, 2), ("x", "y", "z"),
+         dict(n=(3, 3, 3)), ["acc", "res", "src", "it"]),
+        ("ring", (4,), ("data",),
+         dict(batch=1, seq_per_rank=4, heads=2, head_dim=8), ["out"]),
+        ("a2a", (4,), ("model",),
+         dict(batch=1, seq=8, d_model=16, expert_ff=16, experts=8,
+              top_k=2), ["out", "aux"]),
+    ]
+    niter = 2
+    for pat_name, grid, axes, kw, outputs in CASES:
+        pat = get_pattern(pat_name)
+        mesh = make_mesh(grid, axes)
+
+        def run(mode, nstreams, double_buffer):
+            stream = STStream(mesh, axes)
+            win, _ = pat.build(stream, niter, merged=True,
+                               double_buffer=double_buffer, **kw)
+            state = stream.allocate()
+            rng = np.random.RandomState(0)
+            seed_keys = {"faces": ["src"], "ring": ["q", "k", "v"],
+                         "a2a": ["x", "router", "wg", "wu", "wd"]}
+            for b in seed_keys[pat_name]:
+                k = win.qual(b)
+                val = rng.rand(*state[k].shape).astype(
+                    np.asarray(state[k]).dtype) * 0.3
+                state[k] = jax.device_put(val, state[k].sharding)
+            state = stream.synchronize(state, mode=mode,
+                                       throttle="adaptive", resources=8,
+                                       donate=False, nstreams=nstreams)
+            return {b: np.asarray(state[win.qual(b)]) for b in outputs}
+
+        # bit-identity is per executor: the double-buffered multi-stream
+        # schedule must not change a single bit of what THAT executor
+        # produced for the single-stream single-buffered schedule
+        for mode in ("st", "host"):
+            ref = run(mode, 1, False)
+            got = run(mode, 2 if mode == "st" else 1, True)
+            for b in outputs:
+                assert (got[b] == ref[b]).all(), \\
+                    (pat_name, mode, b, np.abs(got[b] - ref[b]).max())
+            print(f"OK {pat_name}_{mode}")
+""")
+
+
+@pytest.mark.slow
+def test_overlap_bit_identical_all_patterns_both_executors():
+    """nstreams=2 + double_buffer through run_compiled, and the
+    double-buffered program through run_host, match the single-stream
+    single-buffered schedule bit-for-bit on every pattern output."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run([sys.executable, "-c", EQUIV_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert r.stdout.count("OK") == 6
