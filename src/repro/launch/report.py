@@ -73,17 +73,21 @@ def roofline_table(recs, mesh="16x16"):
 def st_stats_table(recs):
     """Descriptor-DAG stats per ST benchmark run (faces_worker
     --json-dir records, any pattern)."""
-    rows = ["| name | pattern | mode | throttle | us/iter | derived | "
-            "puts/epoch | hwm | crit depth | dep edges |",
-            "|---|---|---|---|---|---|---|---|---|---|"]
+    rows = ["| name | pattern | mode | throttle | streams | dbuf | "
+            "us/iter | derived | puts/epoch | hwm | crit depth | "
+            "dep edges |",
+            "|---|---|---|---|---|---|---|---|---|---|---|---|"]
     for r in recs:
         if "stats" not in r:
             continue
         s = r["stats"]
         pattern = r.get("pattern") or s.get("pattern") or "faces"
+        nstreams = r.get("nstreams") or s.get("nstreams", 1)
+        dbuf = r.get("double_buffer", s.get("double_buffer", False))
         rows.append(
             f"| {r['name']} | {pattern} | {r['mode']} | "
-            f"{r.get('throttle', '-')} | "
+            f"{r.get('throttle', '-')} | {nstreams} | "
+            f"{'y' if dbuf else 'n'} | "
             f"{r['us_per_iter']:.1f} | {r['derived_us_per_iter']:.2f} | "
             f"{s['puts_per_epoch']:.0f} | {s['resource_high_water']} | "
             f"{s['critical_path_depth']} | {s['dep_edges']} |")
