@@ -17,17 +17,24 @@ Sections:
   overlap  multi-stream schedule (assign_streams + double-buffered
          windows) vs single stream, all patterns, outputs verified
          bit-identical in-worker
+  sweep  message-size x topology derived latency curves (single-node vs
+         2-node ranks_per_node mappings, naive vs node-aware ordering)
+         plus one executor worker per pattern verifying the node-aware
+         schedule bit-identical in-process
   roofline  per (arch x shape x mesh) terms from results/dryrun
   throughput  tiny-config train tokens/s
 
 Worker failures are COUNTED and the harness exits nonzero (CI gates on
 this). ``--json PATH`` writes every parsed row + failures + invariant
 checks as one JSON record; ``--check-invariants`` asserts the Fig. 13
-structural ordering adaptive <= static <= application AND the overlap
-rule (nstreams=2 + double_buffer derived cost <= single stream) on
-derived costs for every ST pattern. ``BENCH_SMOKE=1`` keeps only the
-small-grid configs (CI), ``BENCH_NITER`` overrides iterations per
-worker.
+structural ordering adaptive <= static <= application, the overlap
+rule (nstreams=2 + double_buffer derived cost <= single stream), and
+the topology rules over the sweep grid (derived cost monotone in
+payload bytes, inter-node link strictly costlier than intra-node,
+multi-node mapping never cheaper than single-node, node-aware ordering
+never costlier than naive) for every ST pattern. ``BENCH_SMOKE=1``
+keeps only the small-grid configs (CI), ``BENCH_NITER`` overrides
+iterations per worker.
 """
 import json
 import os
@@ -84,7 +91,11 @@ def _worker(section="", **kw):
                                     "derived": float(parts[2]),
                                     "nstreams": int(kw.get("nstreams", 1)),
                                     "double_buffer": bool(int(
-                                        kw.get("double_buffer", 0)))})
+                                        kw.get("double_buffer", 0))),
+                                    "ranks_per_node": int(
+                                        kw.get("ranks_per_node", 0)),
+                                    "node_aware": bool(int(
+                                        kw.get("node_aware", 0)))})
                 except ValueError:
                     pass
     return True
@@ -180,6 +191,88 @@ def overlap():
                     name=f"overlap_{pat}_{ns}s_db{db}", **kw)
 
 
+_SWEEP_GRIDS = {"faces": (2, 2, 2), "ring": (4,), "a2a": (4,)}
+_SWEEP_RPN = {"faces": 4, "ring": 2, "a2a": 2}      # 2 hardware nodes
+_SWEEP_CACHE = None
+
+
+def _sweep_size_kw(pat, block):
+    return {"faces": dict(n=(block,) * 3),
+            "ring": dict(seq_per_rank=block),
+            "a2a": dict(seq=block)}[pat]
+
+
+def _sweep_points():
+    """Device-free message-size x topology grid shared by the ``sweep``
+    section and ``check_invariants``: derived cost + bytes/epoch per
+    (pattern, block, ranks_per_node, node_aware) point, adaptive/merged
+    (the off-node regime the node-aware pass targets)."""
+    global _SWEEP_CACHE
+    if _SWEEP_CACHE is not None:
+        return _SWEEP_CACHE
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.core.patterns import pattern_programs
+    from repro.core.throttle import CostModel, simulate_pipeline
+
+    blocks = {"faces": [2, 4] if SMOKE else [2, 4, 6, 8],
+              "ring": [8, 16] if SMOKE else [8, 16, 32, 64],
+              "a2a": [8, 16] if SMOKE else [8, 16, 32, 64]}
+    niter = 2
+    points = []
+    for pat, grid in _SWEEP_GRIDS.items():
+        for rpn in (None, _SWEEP_RPN[pat]):
+            # node-aware ordering only exists on a multi-node topology
+            modes = [(False, False)] if rpn is None \
+                else [(False, False), (True, True)]
+            for node_aware, coalesce in modes:
+                for b in blocks[pat]:
+                    progs = pattern_programs(
+                        pat, niter, grid=grid, throttle="adaptive",
+                        resources=8, ranks_per_node=rpn,
+                        node_aware=node_aware, coalesce=coalesce,
+                        **_sweep_size_kw(pat, b))
+                    derived = simulate_pipeline(progs, CostModel()) / niter
+                    s = progs[0].stats()
+                    points.append(dict(
+                        pattern=pat, block=b,
+                        bytes_per_epoch=s["bytes_per_epoch"],
+                        inter_puts=s["inter_puts"],
+                        ranks_per_node=rpn or 0, node_aware=node_aware,
+                        derived=derived))
+    _SWEEP_CACHE = points
+    return points
+
+
+def sweep():
+    """Message-size x topology sweep (the paper's Fig. 10-12 latency-
+    curve shape): derived cost per pattern across payload sizes, single-
+    node vs 2-node mappings, naive vs node-aware ordering — plus one
+    executor worker per pattern verifying the node-aware schedule
+    bit-identical to the naive one in-process."""
+    print("# sweep: message-size x topology derived latency curves "
+          "(adaptive, R=8; rpn = ranks per node)")
+    for p in _sweep_points():
+        tag = "na" if p["node_aware"] else "naive"
+        name = (f"sweep_{p['pattern']}_b{p['block']}"
+                f"_rpn{p['ranks_per_node']}_{tag}")
+        print(f"{name},0.0,{p['derived']:.2f}")
+        RESULTS.append(dict(section="sweep", name=name, us_per_call=0.0,
+                            derived=p["derived"], nstreams=1,
+                            double_buffer=False, **{
+                                k: p[k] for k in
+                                ("pattern", "block", "bytes_per_epoch",
+                                 "inter_puts", "ranks_per_node",
+                                 "node_aware")}))
+    for pat, grid in _SWEEP_GRIDS.items():
+        kw = dict(pattern=pat) if pat != "faces" else {}
+        _worker("sweep", mode="st", throttle="adaptive", merged=1,
+                resources=8, block=8 if pat == "faces" else 16,
+                grid=",".join(str(g) for g in grid),
+                ranks_per_node=_SWEEP_RPN[pat], node_aware=1, coalesce=1,
+                verify_node_aware=1, name=f"sweep_{pat}_nodeaware_exec",
+                **kw)
+
+
 def roofline():
     print("# roofline: per-cell terms from results/dryrun "
           "(us_per_call = bound step time; derived = roofline fraction)")
@@ -267,13 +360,74 @@ def check_invariants():
                            nstreams=2, double_buffer=True))
         print(f"# invariant {pat}: overlapped={overlapped:.2f} <= "
               f"single={t['adaptive']:.2f} -> {'OK' if ok2 else 'VIOLATED'}")
+    checks += check_topology_invariants()
+    return checks
+
+
+def check_topology_invariants():
+    """Link-cost-model invariants over the sweep grid: derived cost
+    monotone in payload bytes (the Fig. 10-12 latency-curve shape), an
+    inter-node put strictly costlier than an intra-node put of equal
+    size, a multi-node mapping never cheaper than single-node, and the
+    node-aware ordering never costlier than the naive order."""
+    from repro.core.throttle import CostModel
+
+    eps = 1e-9
+    checks = []
+    cm = CostModel()
+    print("# invariants: t_put(inter) > t_put(intra); derived monotone "
+          "in bytes; multi-node >= single-node; node-aware <= naive")
+    for nb in (64, 4096, 262144):
+        ok = cm.t_put("inter", nb) > cm.t_put("intra", nb)
+        checks.append(dict(rule="link_cost", pattern=f"{nb}B", ok=ok,
+                           inter=cm.t_put("inter", nb),
+                           intra=cm.t_put("intra", nb)))
+        print(f"# invariant link_cost {nb}B: inter="
+              f"{cm.t_put('inter', nb):.2f} > intra="
+              f"{cm.t_put('intra', nb):.2f} -> {'OK' if ok else 'VIOLATED'}")
+    points = _sweep_points()
+    curves = {}
+    for p in points:
+        key = (p["pattern"], p["ranks_per_node"], p["node_aware"])
+        curves.setdefault(key, []).append(p)
+    for (pat, rpn, na), pts in sorted(curves.items()):
+        pts = sorted(pts, key=lambda p: p["bytes_per_epoch"])
+        mono = all(a["derived"] <= b["derived"] + eps
+                   for a, b in zip(pts, pts[1:]))
+        checks.append(dict(rule="monotone_bytes", pattern=pat, ok=mono,
+                           ranks_per_node=rpn, node_aware=na,
+                           derived=[p["derived"] for p in pts]))
+        curve = " -> ".join(f"{p['derived']:.1f}" for p in pts)
+        print(f"# invariant monotone {pat} rpn={rpn} na={int(na)}: "
+              f"{curve} -> {'OK' if mono else 'VIOLATED'}")
+    by_cfg = {(p["pattern"], p["block"], p["ranks_per_node"],
+               p["node_aware"]): p["derived"] for p in points}
+    for (pat, block, rpn, na), derived in sorted(by_cfg.items()):
+        if rpn and not na:
+            single = by_cfg[(pat, block, 0, False)]
+            ok = derived >= single - eps
+            checks.append(dict(rule="internode_geq", pattern=pat, ok=ok,
+                               block=block, multi=derived, single=single))
+            if not ok:
+                print(f"# invariant internode {pat} b{block}: "
+                      f"multi={derived:.2f} < single={single:.2f} "
+                      "-> VIOLATED")
+        if rpn and na:
+            naive = by_cfg[(pat, block, rpn, False)]
+            ok = derived <= naive + eps
+            checks.append(dict(rule="node_aware", pattern=pat, ok=ok,
+                               block=block, node_aware=derived,
+                               naive=naive))
+            print(f"# invariant node_aware {pat} b{block}: "
+                  f"{derived:.2f} <= naive={naive:.2f} -> "
+                  f"{'OK' if ok else 'VIOLATED'}")
     return checks
 
 
 SECTIONS = {
     "fig12": fig12, "fig13": fig13, "fig14": fig14, "fig15": fig15,
     "fig16_17": fig16_17, "ring": ring, "a2a": a2a, "overlap": overlap,
-    "roofline": roofline, "throughput": throughput,
+    "sweep": sweep, "roofline": roofline, "throughput": throughput,
 }
 
 

@@ -180,7 +180,8 @@ def make_moe_a2a_kernels(cfg, axis, n_shards):
 
 
 def create_a2a_window(stream, *, batch, seq, d_model, expert_ff, e_l,
-                      dtype=jnp.float32, name="a2a", double_buffer=False):
+                      dtype=jnp.float32, name="a2a", double_buffer=False,
+                      ranks_per_node=None):
     """Window with the (replicated) token block, this shard's expert
     weights, the partial-output/aux buffers, and one recv buffer per
     peer shift of the aggregated-put combine. ``double_buffer`` ping/
@@ -201,7 +202,8 @@ def create_a2a_window(stream, *, batch, seq, d_model, expert_ff, e_l,
         bufs[f"recvp{k}"] = (tok, dtype)
         bufs[f"recva{k}"] = ((1,), jnp.float32)
         db_names += [f"recvp{k}", f"recva{k}"]
-    topo = shifts_topology(n, stream.grid_axes)
+    topo = shifts_topology(n, stream.grid_axes,
+                           ranks_per_node=ranks_per_node)
     return stream.create_window(name, bufs, list(topo.group), topology=topo,
                                 double_buffer=double_buffer,
                                 db_names=db_names)
@@ -213,7 +215,7 @@ def build_moe_a2a_program(stream, niter, *, cfg=None, batch=1, seq=8,
                           d_model=16, expert_ff=16, experts=None, top_k=2,
                           dtype=jnp.float32, merged=True, host_sync_every=0,
                           kernels=None, name="a2a", double_buffer=False,
-                          **_kw):
+                          ranks_per_node=None, **_kw):
     """Enqueue ``niter`` expert-parallel MoE layers: post -> local
     gather/expert/scatter kernel -> start -> an aggregated put of the
     partial output (+ aux) to EVERY peer shift -> complete -> wait ->
@@ -234,7 +236,8 @@ def build_moe_a2a_program(stream, niter, *, cfg=None, batch=1, seq=8,
     e_l = cfg.moe.num_experts // n
     win = create_a2a_window(stream, batch=batch, seq=seq, d_model=d_model,
                             expert_ff=expert_ff, e_l=e_l, dtype=dtype,
-                            name=name, double_buffer=double_buffer)
+                            name=name, double_buffer=double_buffer,
+                            ranks_per_node=ranks_per_node)
     kernels = kernels or make_moe_a2a_kernels(cfg, stream.grid_axes[0], n)
     for it in range(niter):
         phase = it % 2 if double_buffer else 0

@@ -144,14 +144,18 @@ def compare_kernel():
 # Program builders
 # ---------------------------------------------------------------------------
 
-def faces_topology(grid_axes=("x", "y", "z")) -> PatternTopology:
-    """26-neighbor halo group; opposite = component-wise negation."""
+def faces_topology(grid_axes=("x", "y", "z"),
+                   ranks_per_node=None) -> PatternTopology:
+    """26-neighbor halo group; opposite = component-wise negation.
+    ``ranks_per_node`` maps consecutive linear ranks onto hardware nodes
+    so lowering can tag each direction's put intra- vs inter-node."""
     return PatternTopology("faces", tuple(grid_axes),
-                           tuple(DIRECTIONS))
+                           tuple(DIRECTIONS),
+                           ranks_per_node=ranks_per_node)
 
 
 def create_faces_window(stream, n, name="faces", extra_buffers=None,
-                        double_buffer=False):
+                        double_buffer=False, ranks_per_node=None):
     """Window with: src block, halo recv buffer per direction, accumulator,
     and an iteration counter so kernels are iteration-independent (the host
     baseline must not recompile per iteration). ``double_buffer`` gives
@@ -168,10 +172,11 @@ def create_faces_window(stream, n, name="faces", extra_buffers=None,
         db_names += [f"recv{d[0]}{d[1]}{d[2]}", f"send{d[0]}{d[1]}{d[2]}"]
     if extra_buffers:
         bufs.update(extra_buffers)
-    return stream.create_window(name, bufs, DIRECTIONS,
-                                topology=faces_topology(stream.grid_axes),
-                                double_buffer=double_buffer,
-                                db_names=db_names)
+    return stream.create_window(
+        name, bufs, DIRECTIONS,
+        topology=faces_topology(stream.grid_axes,
+                                ranks_per_node=ranks_per_node),
+        double_buffer=double_buffer, db_names=db_names)
 
 
 def enqueue_faces_iteration(stream, win, n, kernels, merged=True, phase=0):
@@ -221,7 +226,7 @@ def enqueue_faces_iteration(stream, win, n, kernels, merged=True, phase=0):
 def build_faces_program(stream, n, niter, merged=True, kernels=None,
                         host_sync_every=0, extra_buffers=None,
                         overlap_kernel=None, name="faces",
-                        double_buffer=False):
+                        double_buffer=False, ranks_per_node=None):
     """Enqueue the FULL Faces benchmark program: window + kernels + niter
     inner-loop iterations. ``host_sync_every=k`` inserts an application-
     level host_sync() every k iterations (paper §5.2.1 throttling — each
@@ -230,11 +235,14 @@ def build_faces_program(stream, n, niter, merged=True, kernels=None,
     a buffer from ``extra_buffers``. ``double_buffer`` alternates epochs
     over ping/pong send/recv+counter sets so a multi-stream schedule
     (``nstreams>1``) can run epoch e+1's transfers during epoch e's
-    compute. Returns (window, kernels)."""
+    compute. ``ranks_per_node`` sets the hardware node mapping on the
+    window topology: each direction's put lowers with an intra/inter
+    link tag. Returns (window, kernels)."""
     stream.pattern = stream.pattern or "faces"
     win = create_faces_window(stream, n, name=name,
                               extra_buffers=extra_buffers,
-                              double_buffer=double_buffer)
+                              double_buffer=double_buffer,
+                              ranks_per_node=ranks_per_node)
     kernels = kernels or make_faces_kernels(n)
     for it in range(niter):
         enqueue_faces_iteration(stream, win, n, kernels, merged=merged,

@@ -48,6 +48,18 @@ def buffer_nbytes(stream, qualified: str) -> int:
     return 0
 
 
+def put_link(stream, win, direction):
+    """(link, node_deltas) of a put in ``direction`` on ``win``: the
+    window topology's node mapping (``ranks_per_node``) classifies the
+    put as on-node ("intra", xGMI) or off-node ("inter", through the
+    NIC) over the direction's full rank permutation. Windows without a
+    topology (or without a node mapping) are single-node: "intra"."""
+    topo = getattr(win, "topology", None)
+    if topo is None or not getattr(topo, "ranks_per_node", None):
+        return "intra", ()
+    return topo.link_of(stream.perm_for(tuple(direction)))
+
+
 def lower_segment(stream, seg) -> TriggeredProgram:
     """Lower one segment of the deferred-op queue onto the IR.
 
@@ -63,6 +75,7 @@ def lower_segment(stream, seg) -> TriggeredProgram:
     closed: Dict[str, int] = {}          # window -> last closed epoch
     nclosed: Dict[tuple, int] = {}       # (window, phase) -> epochs closed
     last_dsts: Dict[str, tuple] = {}     # window -> last epoch's put dsts
+    put_counts: Dict[tuple, int] = {}    # (window, epoch) -> puts flushed
 
     for op in seg:
         if op.kind == "kernel":
@@ -94,10 +107,12 @@ def lower_segment(stream, seg) -> TriggeredProgram:
                 direction=d, slot=slot,
                 counter=win.comp_sig_at(op.phase), wire=True,
                 phase=op.phase, label=f"comp{d}")
+            link, deltas = put_link(stream, win, d)
             pending.setdefault(win.name, []).append(TriggeredOp(
                 "put", window=win.name, src=op.put["src"],
                 dst=op.put["dst"], direction=d,
                 nbytes=buffer_nbytes(stream, op.put["src"]),
+                link=link, node_deltas=deltas,
                 trigger_counter=(f"{win.post_sig_at(op.phase)}"
                                  f"[{win.group.index(d)}]"),
                 completion_counter=f"{win.comp_sig_at(op.phase)}[{slot}]",
@@ -116,17 +131,24 @@ def lower_segment(stream, seg) -> TriggeredProgram:
             closed[win.name] = epoch
             nclosed[(win.name, op.phase % 2)] = arm + 1
             last_dsts[win.name] = tuple(p.dst for p in flushed)
+            put_counts[(win.name, epoch)] = len(flushed)
             epoch += 1
         elif op.kind == "wait":
             win = op.window
+            w_epoch = closed.get(win.name, 0)
             # the fence covers exactly what the epoch's puts delivered:
             # readers of the received buffers must follow the wait, but
             # compute state (src/accumulators) stays free to overlap on
-            # the compute stream
+            # the compute stream. expected_puts threads the epoch's put
+            # count to the simulator: a wait whose epoch recorded a
+            # different number of completions is a schedule bug, not a
+            # resolve-at-t0 (zero puts stays legitimate for peer-less
+            # epochs, e.g. a single-shard a2a).
             nodes.append(TriggeredOp(
                 "wait", window=win.name,
                 counter=win.comp_sig_at(op.phase),
-                epoch=closed.get(win.name, 0), phase=op.phase,
+                epoch=w_epoch, phase=op.phase,
+                expected_puts=put_counts.get((win.name, w_epoch), 0),
                 writes=last_dsts.get(win.name, ())))
         else:
             raise ValueError(f"cannot lower op kind {op.kind!r}")

@@ -46,12 +46,23 @@ class PatternTopology:
     belongs to group[k]); ``modular_opposite`` selects the direction
     algebra: plain component negation (Faces) vs negation modulo
     ``grid_shape`` (shift groups on a periodic ring, where -k == n-k).
+
+    ``ranks_per_node`` is the HARDWARE node mapping: consecutive linear
+    ranks share a node (the paper's system: 8 GCDs per node over xGMI,
+    Slingshot NICs between nodes). It makes the topology a first-class
+    schedule input — lowering tags every put with its link class
+    ("intra" = on-node, "inter" = crosses a node boundary for at least
+    one rank pair of its permutation) so the cost model can price
+    per-link alpha-beta latencies and ``node_aware_pass`` can reorder
+    off-node transfers first. ``None`` means a single node (every put
+    intra).
     """
     name: str
     grid_axes: Tuple[str, ...]
     group: Tuple[Tuple[int, ...], ...]
     modular_opposite: bool = False
     grid_shape: Optional[Tuple[int, ...]] = None
+    ranks_per_node: Optional[int] = None
 
     def opposite(self, direction) -> Tuple[int, ...]:
         d = tuple(direction)
@@ -67,18 +78,47 @@ class PatternTopology:
         """Counter slot on the TARGET that direction's traffic lands in."""
         return self.group.index(self.opposite(direction))
 
+    def node_of(self, rank: int) -> int:
+        """Hardware node index of a linear rank (0 when single-node)."""
+        if not self.ranks_per_node:
+            return 0
+        return rank // self.ranks_per_node
 
-def ring_topology(grid_axes=("data",)) -> PatternTopology:
+    def link_of(self, pairs) -> Tuple[str, Tuple[int, ...]]:
+        """Link class of a put whose permutation is ``pairs`` (the
+        (src, dst) linear-rank list from ``STStream.perm_for``).
+
+        Returns ``(link, node_deltas)``: "inter" when ANY rank pair
+        crosses a node boundary (that put goes through the NIC — worst
+        case over the SPMD permutation), else "intra"; node_deltas is
+        the PER-SOURCE-RANK node-index delta vector (ordered by source
+        rank). Two puts with equal vectors target the same hardware
+        node from every rank — the exactness ``node_aware_pass``
+        coalescing needs (a mere set of deltas would aggregate puts
+        whose per-rank targets differ)."""
+        if not self.ranks_per_node:
+            return "intra", ()
+        deltas = tuple(self.node_of(dst) - self.node_of(src)
+                       for src, dst in sorted(pairs))
+        link = "inter" if any(d != 0 for d in deltas) else "intra"
+        return link, deltas
+
+
+def ring_topology(grid_axes=("data",),
+                  ranks_per_node: Optional[int] = None) -> PatternTopology:
     """1-D double-ended ring: send +1, receive from -1."""
-    return PatternTopology("ring", tuple(grid_axes), ((1,), (-1,)))
+    return PatternTopology("ring", tuple(grid_axes), ((1,), (-1,)),
+                           ranks_per_node=ranks_per_node)
 
 
-def shifts_topology(n: int, grid_axes=("model",)) -> PatternTopology:
+def shifts_topology(n: int, grid_axes=("model",),
+                    ranks_per_node: Optional[int] = None) -> PatternTopology:
     """All-to-all on a periodic 1-D grid: every nonzero shift 1..n-1.
     Opposite is modular (-k == n-k) so the group is closed."""
     return PatternTopology("shifts", tuple(grid_axes),
                            tuple((k,) for k in range(1, n)),
-                           modular_opposite=True, grid_shape=(n,))
+                           modular_opposite=True, grid_shape=(n,),
+                           ranks_per_node=ranks_per_node)
 
 
 # ---------------------------------------------------------------------------
@@ -144,29 +184,42 @@ def pattern_programs(name: str, niter: int, *, grid=None,
                      throttle: str = "adaptive", resources: int = 16,
                      merged: bool = True, ordered: bool = False,
                      host_sync_every: int = 0, nstreams: int = 1,
-                     double_buffer: bool = False, **build_kw):
+                     double_buffer: bool = False,
+                     ranks_per_node: Optional[int] = None,
+                     node_aware: bool = False, coalesce: bool = False,
+                     **build_kw):
     """Lower+schedule a pattern on a device-free stream — the same
     builder and passes the executors use, minus a mesh. ``nstreams>1``
     runs the stream-assignment pass (compute stream + communication
     streams); ``double_buffer`` builds the program on ping/pong window
-    buffers so alternating epochs are conflict-free."""
+    buffers so alternating epochs are conflict-free. ``ranks_per_node``
+    sets the hardware node mapping on the pattern topology (puts get
+    intra/inter link tags); ``node_aware``/``coalesce`` run the
+    node-aware schedule pass (off-node puts first, optional same-target-
+    node aggregation)."""
     from repro.core.stream import STStream
 
     p = get_pattern(name)
     grid = tuple(grid) if grid is not None else p.default_grid
     stream = STStream(None, p.grid_axes, grid_shape=grid)
     p.build(stream, niter, merged=merged, host_sync_every=host_sync_every,
-            double_buffer=double_buffer, **build_kw)
+            double_buffer=double_buffer, ranks_per_node=ranks_per_node,
+            **build_kw)
     return stream.scheduled_programs(throttle=throttle, resources=resources,
                                      merged=merged, ordered=ordered,
-                                     nstreams=nstreams)
+                                     nstreams=nstreams,
+                                     node_aware=node_aware,
+                                     coalesce=coalesce)
 
 
 def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
                      resources: int = 16, merged: bool = True,
                      ordered: bool = False, host_orchestrated: bool = False,
                      cm=None, grid=None, nstreams: int = 1,
-                     double_buffer: bool = False, **build_kw) -> float:
+                     double_buffer: bool = False,
+                     ranks_per_node: Optional[int] = None,
+                     node_aware: bool = False, coalesce: bool = False,
+                     **build_kw) -> float:
     """Derived critical-path time of ``niter`` pattern iterations.
 
     ``policy="application"`` (§5.2.1) splits the program every iteration
@@ -174,7 +227,9 @@ def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
     ordering adaptive <= static <= application holds structurally for
     EVERY pattern, exactly as for Faces. ``nstreams``/``double_buffer``
     select the overlapped multi-stream schedule (the simulator walks one
-    timeline per stream)."""
+    timeline per stream). ``ranks_per_node`` prices off-node puts on the
+    inter-node link (with serialized NIC injection);
+    ``node_aware``/``coalesce`` apply the node-aware ordering pass."""
     from repro.core.throttle import simulate_pipeline
 
     host_sync_every = 1 if policy == "application" else 0
@@ -184,5 +239,7 @@ def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
                              ordered=ordered,
                              host_sync_every=host_sync_every,
                              nstreams=nstreams, double_buffer=double_buffer,
+                             ranks_per_node=ranks_per_node,
+                             node_aware=node_aware, coalesce=coalesce,
                              **build_kw)
     return simulate_pipeline(progs, cm, host_orchestrated)

@@ -182,12 +182,14 @@ def make_ring_kernels(axis, n, seq_per_rank, head_dim, causal=True,
 
 def create_ring_window(stream, *, batch, seq_per_rank, heads, head_dim,
                        dtype=jnp.float32, name="ring",
-                       double_buffer=False):
+                       double_buffer=False, ranks_per_node=None):
     """Window with the local Q block, the rotating KV double buffers, the
     f32 flash-merge accumulators, and a step counter (so the attend
     kernel is iteration-independent, like Faces' "it").
     ``double_buffer`` ping/pongs the recv landing zones (and counters) so
-    adjacent ring steps' transfers never collide."""
+    adjacent ring steps' transfers never collide. ``ranks_per_node``
+    sets the node mapping so the KV rotation puts lower with intra/inter
+    link tags."""
     blk = (batch, seq_per_rank, heads, head_dim)
     bufs = {"q": (blk, dtype), "k": (blk, dtype), "v": (blk, dtype),
             "recvk": (blk, dtype), "recvv": (blk, dtype),
@@ -196,7 +198,7 @@ def create_ring_window(stream, *, batch, seq_per_rank, heads, head_dim,
             "acc": ((batch, heads, seq_per_rank, head_dim), jnp.float32),
             "step": ((1,), jnp.int32),
             "out": (blk, dtype)}
-    topo = ring_topology(stream.grid_axes)
+    topo = ring_topology(stream.grid_axes, ranks_per_node=ranks_per_node)
     return stream.create_window(name, bufs, list(topo.group), topology=topo,
                                 double_buffer=double_buffer,
                                 db_names=("recvk", "recvv"))
@@ -207,7 +209,8 @@ def create_ring_window(stream, *, batch, seq_per_rank, heads, head_dim,
 def build_ring_program(stream, niter, *, batch=1, seq_per_rank=8, heads=2,
                        head_dim=8, causal=True, dtype=jnp.float32,
                        merged=True, host_sync_every=0, kernels=None,
-                       name="ring", double_buffer=False, **_kw):
+                       name="ring", double_buffer=False,
+                       ranks_per_node=None, **_kw):
     """Enqueue ``niter`` full ring-attention rotations: per ring step one
     access epoch — post -> attend kernel (overlap launch) -> start ->
     put(k)/put(v) on the +1 direction -> complete -> wait -> rotate
@@ -220,7 +223,8 @@ def build_ring_program(stream, niter, *, batch=1, seq_per_rank=8, heads=2,
     axis = stream.grid_axes[0]
     win = create_ring_window(stream, batch=batch, seq_per_rank=seq_per_rank,
                              heads=heads, head_dim=head_dim, dtype=dtype,
-                             name=name, double_buffer=double_buffer)
+                             name=name, double_buffer=double_buffer,
+                             ranks_per_node=ranks_per_node)
     kernels = kernels or make_ring_kernels(axis, n, seq_per_rank, head_dim,
                                            causal=causal, dtype=dtype)
     q = win.qual

@@ -26,6 +26,12 @@ Passes
         host_sync() program splits at lowering time;
       - "none" places no edges (infinite slots).
     Always records the ResourcePool high-water mark in program meta.
+  * :func:`node_aware_pass` — topology-aware put ordering: within each
+    epoch's put run, off-node ("inter"-link) puts issue FIRST so their
+    long latency and serialized NIC injection overlap the on-node puts
+    and compute; ``coalesce`` marks adjacent same-target-node off-node
+    puts as aggregated (one message alpha per group). Dependency edges
+    are never crossed, so the executors stay bit-identical.
   * :func:`assign_streams` — multi-stream overlap (paper §2/§6.7: the
     separate communication stream is what lets the NIC move epoch e+1's
     bytes while the device computes epoch e): partition the DAG onto a
@@ -144,8 +150,77 @@ def throttle_pass(prog: TriggeredProgram, policy: str,
     for p in puts:
         p.deps = tuple(dict.fromkeys(p.deps))   # dedupe, keep order
     prog.meta["throttle"] = policy
-    prog.meta["resources"] = resources
+    # unbounded policies hold no descriptor slots: there is no real R to
+    # report (None renders as "—" in launch/report), only the high-water
+    # mark of what the schedule actually kept in flight
+    prog.meta["resources"] = None if unbounded else resources
     prog.meta["resource_high_water"] = pool.high_water
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# node-aware ordering (off-node transfers first, optional aggregation)
+# ---------------------------------------------------------------------------
+
+def _off_node_first(run):
+    """Stable node-aware order of one epoch's put run: off-node
+    ("inter") puts WITHOUT an in-run dependency edge go first (they can
+    inject into the NIC command queue immediately — issuing them early
+    is the whole win), then dependency-free on-node puts, then every
+    dependency-gated put in its ORIGINAL order. Gated puts stay last
+    and unsorted because (a) the original order already satisfies their
+    in-run edges and (b) a gated put enqueued early would head-of-line
+    block the NIC behind a transfer that cannot start yet. Two puts
+    connected by a dependency edge therefore never swap."""
+    in_run = {p.op_id for p in run}
+    free = [p for p in run if not any(d in in_run for d in p.deps)]
+    gated = [p for p in run if any(d in in_run for d in p.deps)]
+    return ([p for p in free if p.link == "inter"]
+            + [p for p in free if p.link != "inter"] + gated)
+
+
+def node_aware_pass(prog: TriggeredProgram, node_aware: bool = True,
+                    coalesce: bool = False) -> TriggeredProgram:
+    """Node-aware put ordering (the node-aware-strategies lever for the
+    paper's off-node gap): within each epoch's put run, issue off-node
+    ("inter") puts FIRST so their long wire latency and serialized NIC
+    injection overlap the epoch's remaining on-node puts and compute —
+    never reordering across a dependency edge, so both executors stay
+    bit-identical to the naive order (same DAG, different emission
+    order). ``coalesce`` additionally marks the tail puts of adjacent
+    same-target-node ("node_deltas") off-node groups as ``aggregated``:
+    they ride the head put's message, so the cost model waives their
+    per-message alpha (node-aware aggregation)."""
+    prog.meta["node_aware"] = bool(node_aware)
+    prog.meta["coalesce"] = bool(coalesce)
+    if not node_aware:
+        return prog
+    out: list = []
+    nodes = prog.nodes
+    i = 0
+    while i < len(nodes):
+        n = nodes[i]
+        if n.kind != "put":
+            out.append(n)
+            i += 1
+            continue
+        j = i
+        while (j < len(nodes) and nodes[j].kind == "put"
+               and nodes[j].window == n.window
+               and nodes[j].epoch == n.epoch):
+            j += 1
+        out.extend(_off_node_first(nodes[i:j]))
+        i = j
+    prog.nodes = out
+    if coalesce:
+        prev = None
+        for n in prog.nodes:
+            if (n.kind == "put" and prev is not None
+                    and n.link == "inter" and prev.link == "inter"
+                    and n.window == prev.window and n.epoch == prev.epoch
+                    and n.node_deltas == prev.node_deltas):
+                n.aggregated = True
+            prev = n if n.kind == "put" else None
     return prog
 
 
@@ -275,11 +350,19 @@ def validate_deps(prog: TriggeredProgram) -> TriggeredProgram:
 
 def schedule(prog: TriggeredProgram, *, throttle: str = "adaptive",
              resources: int = 64, merged: bool = True,
-             ordered: bool = False, nstreams: int = 1) -> TriggeredProgram:
-    """Apply all schedule passes; returns the same (mutated) program."""
+             ordered: bool = False, nstreams: int = 1,
+             node_aware: bool = False,
+             coalesce: bool = False) -> TriggeredProgram:
+    """Apply all schedule passes; returns the same (mutated) program.
+
+    ``node_aware`` runs after throttling (it must respect every
+    dependency edge the earlier passes placed) and before stream
+    assignment (the cross-stream conflict edges are derived from the
+    final emission order)."""
     prog = fuse_signals(prog, merged)
     prog = ordering_pass(prog, ordered)
     prog = throttle_pass(prog, throttle, resources)
+    prog = node_aware_pass(prog, node_aware, coalesce)
     prog = assign_streams(prog, nstreams)
     prog = validate_deps(prog)
     return prog

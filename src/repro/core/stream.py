@@ -213,20 +213,23 @@ class STStream:
     # -- compile pipeline: lower (1) + schedule (2) ---------------------------
     def scheduled_programs(self, *, throttle: str = "adaptive",
                            resources: int = 64, merged: bool = True,
-                           ordered: bool = False,
-                           nstreams: int = 1) -> List[TriggeredProgram]:
+                           ordered: bool = False, nstreams: int = 1,
+                           node_aware: bool = False,
+                           coalesce: bool = False) -> List[TriggeredProgram]:
         """Lower the op queue and run the schedule passes; one scheduled
         descriptor DAG per host_sync-delimited segment. Cached per
         (queue, options) so repeated synchronize calls reuse programs
         (and therefore compiled executables)."""
         key = (tuple(op.cache_key() for op in self.program),
-               throttle, resources, merged, ordered, nstreams)
+               throttle, resources, merged, ordered, nstreams,
+               node_aware, coalesce)
         progs = self._sched_cache.get(key)
         if progs is None:
             progs = [
                 schedule(lower_segment(self, seg), throttle=throttle,
                          resources=resources, merged=merged,
-                         ordered=ordered, nstreams=nstreams)
+                         ordered=ordered, nstreams=nstreams,
+                         node_aware=node_aware, coalesce=coalesce)
                 for seg in split_segments(self.program)]
             self._sched_cache[key] = progs
         return progs
@@ -235,7 +238,8 @@ class STStream:
     def synchronize(self, state, mode: str = "st", throttle: str = "adaptive",
                     resources: int = 64, merged: bool = True,
                     donate: bool = True, ordered: bool = False,
-                    nstreams: int = 1):
+                    nstreams: int = 1, node_aware: bool = False,
+                    coalesce: bool = False):
         """Execute the enqueued program; returns the new state.
 
         mode="st": one compiled program, single host sync (this call).
@@ -246,7 +250,8 @@ class STStream:
                              "(constructed with mesh=None)")
         for prog in self.scheduled_programs(
                 throttle=throttle, resources=resources, merged=merged,
-                ordered=ordered, nstreams=nstreams):
+                ordered=ordered, nstreams=nstreams, node_aware=node_aware,
+                coalesce=coalesce):
             if mode == "st":
                 state = backends.run_compiled(self, prog, state,
                                               donate=donate)

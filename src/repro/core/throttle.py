@@ -15,8 +15,19 @@ dispatch and kernel-launch costs dominate small-message halo exchange):
   t_dispatch — host enqueue of one descriptor (CPU -> queue)   [us]
   t_launch   — device kernel launch/teardown                   [us]
   t_sync     — host<->device synchronization (hipStreamSync)   [us]
-  t_put(b)   — network put latency for b bytes                 [us]
+  t_put(l,b) — per-LINK alpha-beta put latency for b bytes     [us]
   t_signal   — tiny signal put                                 [us]
+
+The put cost is a per-link alpha-beta model: an "intra" put rides the
+on-node xGMI fabric (alpha = ``put_base``, beta = ``put_per_kb``); an
+"inter" put crosses the Slingshot NIC (``inter_base``/``inter_per_kb``,
+strictly costlier at every size — the paper's open off-node gap).
+Inter-node puts additionally SERIALIZE their injection on the rank's
+single NIC (``t_nic`` timeline): the NIC is busy for the put's beta
+term, so a burst of off-node puts drains one after another — the lever
+``schedule.node_aware_pass`` exploits by issuing them first. A put the
+pass marked ``aggregated`` (coalesced same-target-node group tail)
+rides the group head's message and pays no per-message alpha.
 
 Timeline model: the host enqueues every descriptor (t_dispatch each);
 each device STREAM executes its kernels/signals/waits in program order
@@ -24,10 +35,15 @@ on its own timeline (``t_dev[stream]`` — single-stream programs have
 exactly one); puts are offloaded (the issuing stream continues while the
 NIC moves bytes) and start no earlier than the completion of every
 dependency edge the schedule passes added; a wait kernel polls until its
-epoch's put completions have landed. Cross-stream ordering flows ONLY
-through dependency edges resolved in ``done`` — an edge naming an op_id
-outside the program raises instead of being treated as completed at t=0
-(dangling edges used to silently vanish here).
+epoch's put completions have landed — and RAISES when the number of
+recorded completions differs from the put count lowering threaded into
+the node (``expected_puts``): a wait silently resolving at t=0 was the
+same bug class as a dangling edge. Zero expected puts (peer-less epoch,
+e.g. single-shard a2a) stays a legitimate immediate resolve.
+Cross-stream ordering flows ONLY through dependency edges resolved in
+``done`` — an edge naming an op_id outside the program raises instead
+of being treated as completed at t=0 (dangling edges used to silently
+vanish here).
 ``host_orchestrated=True`` models the Fig. 9a baseline: the device waits
 for each dispatch and every epoch boundary (start/complete/wait) pays a
 full host round-trip.
@@ -47,11 +63,27 @@ class CostModel:
     t_launch: float = 4.0
     t_sync: float = 12.0
     t_signal: float = 1.2
-    put_base: float = 2.0
-    put_per_kb: float = 0.05
+    t_issue: float = 0.2        # stream dequeues one put descriptor [us]
+    put_base: float = 2.0       # intra-node (xGMI) alpha          [us]
+    put_per_kb: float = 0.05    # intra-node beta                  [us/KB]
+    inter_base: float = 9.0     # inter-node (Slingshot) alpha     [us]
+    inter_per_kb: float = 0.35  # inter-node beta = NIC injection  [us/KB]
 
-    def t_put(self, nbytes: int) -> float:
-        return self.put_base + self.put_per_kb * nbytes / 1024.0
+    def link_cost(self, link: str):
+        """(alpha, beta) of a link class; unknown classes price as the
+        off-node link (the conservative choice)."""
+        if link == "intra":
+            return self.put_base, self.put_per_kb
+        return self.inter_base, self.inter_per_kb
+
+    def t_put(self, link, nbytes: int = None) -> float:
+        """Alpha-beta put latency. ``t_put("inter", b)`` prices a link;
+        the pre-topology single-argument form ``t_put(b)`` still works
+        and prices the intra-node link."""
+        if nbytes is None:
+            link, nbytes = "intra", link
+        alpha, beta = self.link_cost(link)
+        return alpha + beta * nbytes / 1024.0
 
 
 def simulate_program(prog: TriggeredProgram, cm: CostModel = None,
@@ -62,6 +94,8 @@ def simulate_program(prog: TriggeredProgram, cm: CostModel = None,
     known = {n.op_id for n in prog.nodes}
     t_host = 0.0                        # host (dispatch) timeline
     t_dev: Dict[int, float] = defaultdict(float)   # per-stream timelines
+    t_nic = 0.0                         # the rank's NIC injection timeline:
+    #                                     inter-node puts serialize here
     done: Dict[int, float] = {}         # op_id -> completion time
     comp_at: Dict[tuple, List[float]] = defaultdict(list)
     #                                   (window, epoch) -> put completions
@@ -97,9 +131,25 @@ def simulate_program(prog: TriggeredProgram, cm: CostModel = None,
             t_dev[s] = start + (cm.t_signal if node.fused
                                 else cm.t_launch + cm.t_signal)
         elif node.kind == "put":
-            end = start + cm.t_put(node.nbytes)
+            alpha, beta = cm.link_cost(node.link or "intra")
+            xfer = beta * node.nbytes / 1024.0
+            if node.link == "inter":
+                # the rank's single NIC injects off-node puts one after
+                # another: busy for the bandwidth (beta) term, then the
+                # wire alpha until the payload lands. An aggregated put
+                # (coalesced same-target-node group tail) rides the
+                # head's message: injection only, no per-message alpha.
+                inject = max(start, t_nic)
+                t_nic = inject + xfer
+                end = t_nic + (0.0 if node.aggregated else alpha)
+            else:
+                end = start + alpha + xfer
             comp = end
-            t_dev[s] = start   # offloaded: the issuing stream continues
+            # offloaded: the issuing stream continues after dequeuing
+            # the descriptor (t_issue) — issue ORDER therefore matters,
+            # which is what node_aware_pass optimizes (off-node puts
+            # reach the NIC in the earliest issue slots)
+            t_dev[s] = start + cm.t_issue
             if node.chained is not None and node.chained.wire:
                 # §3.2 chained wire signal: its own tiny launch on the
                 # issuing stream plus a wire hop before completion lands
@@ -123,7 +173,17 @@ def simulate_program(prog: TriggeredProgram, cm: CostModel = None,
             # the wait kernel polls the completion counter until its
             # epoch's puts have landed — THE serialization point the
             # multi-stream schedule confines to the communication stream
-            arrived = max(comp_at.get((node.window, node.epoch), [0.0]))
+            comps = comp_at.get((node.window, node.epoch), [])
+            if node.expected_puts >= 0 and len(comps) != node.expected_puts:
+                raise ValueError(
+                    f"simulate_program: wait on ({node.window!r}, epoch "
+                    f"{node.epoch}) recorded {len(comps)} put "
+                    f"completion(s) but lowering expected "
+                    f"{node.expected_puts} — a wait must not silently "
+                    "resolve at t=0 (same class as a dangling edge); "
+                    "zero-put epochs are legitimate only when lowering "
+                    "flushed zero puts")
+            arrived = max(comps, default=0.0)
             t_dev[s] = max(start, arrived) + cm.t_launch
             if host_orchestrated:
                 block()

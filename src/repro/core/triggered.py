@@ -73,6 +73,23 @@ class TriggeredOp:
     dst: Optional[str] = None
     direction: Any = None
     nbytes: int = 0
+    link: str = "intra"             # physical link class of a put: "intra"
+    #                                 (on-node xGMI) or "inter" (off-node
+    #                                 through the NIC) — from the window
+    #                                 topology's node mapping at lowering
+    node_deltas: Tuple[int, ...] = ()   # per-source-rank node-index delta
+    #                                 vector of the put's permutation:
+    #                                 equal vectors = same target node
+    #                                 from EVERY rank, the coalescing key
+    #                                 for node_aware_pass aggregation
+    aggregated: bool = False        # tail of a coalesced same-target-node
+    #                                 put group: rides the head's message,
+    #                                 so the simulator waives its alpha
+    expected_puts: int = -1         # wait nodes: put count of the epoch
+    #                                 this wait joins, threaded from
+    #                                 lowering so the simulator can refuse
+    #                                 a silent zero-completion resolve
+    #                                 (-1 = unknown/hand-built: unchecked)
     epoch: int = 0
     phase: int = 0                  # ping/pong buffer parity (double-
     #                                 buffered windows): which counter/data
@@ -185,13 +202,18 @@ class TriggeredProgram:
             "signals": signals,
             "kernels": sum(1 for n in self.nodes if n.kind == "kernel"),
             "dep_edges": sum(len(n.deps) for n in puts),
+            "inter_puts": sum(1 for p in puts if p.link == "inter"),
             "resource_high_water": self.meta.get("resource_high_water", 0),
             "critical_path_depth": self.critical_path_depth(),
             "throttle": self.meta.get("throttle", "none"),
+            # None for unbounded policies (none/application): those
+            # schedules hold no descriptor slots, so there is no real R
+            "resources": self.meta.get("resources"),
             "merged": self.meta.get("merged", True),
             "pattern": self.meta.get("pattern", ""),
             "nstreams": self.meta.get("nstreams", 1),
             "double_buffer": self.meta.get("double_buffer", False),
+            "node_aware": self.meta.get("node_aware", False),
         }
 
 

@@ -70,13 +70,23 @@ def roofline_table(recs, mesh="16x16"):
     return "\n".join(rows)
 
 
+def _num(val, fmt):
+    """Render a possibly-missing numeric field; None (e.g. no real R for
+    an unbounded throttle policy, or a record predating the column) is
+    an em-dash, never a KeyError."""
+    return "—" if val is None else format(val, fmt)
+
+
 def st_stats_table(recs):
     """Descriptor-DAG stats per ST benchmark run (faces_worker
-    --json-dir records, any pattern)."""
-    rows = ["| name | pattern | mode | throttle | streams | dbuf | "
-            "us/iter | derived | puts/epoch | hwm | crit depth | "
-            "dep edges |",
-            "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    --json-dir records, any pattern). Records written before a column
+    existed (pre-overlap nstreams/double_buffer, pre-topology R/link
+    fields) render with defaults instead of raising."""
+    rows = ["| name | pattern | mode | throttle | R | streams | dbuf | "
+            "node-aware | us/iter | derived | puts/epoch | inter | hwm | "
+            "crit depth | dep edges |",
+            "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"
+            "---|"]
     for r in recs:
         if "stats" not in r:
             continue
@@ -84,13 +94,21 @@ def st_stats_table(recs):
         pattern = r.get("pattern") or s.get("pattern") or "faces"
         nstreams = r.get("nstreams") or s.get("nstreams", 1)
         dbuf = r.get("double_buffer", s.get("double_buffer", False))
+        node_aware = r.get("node_aware", s.get("node_aware", False))
+        # an unbounded policy (none/application) holds no slots: its
+        # record carries resources=None and renders as "—"
+        res = r.get("resources", s.get("resources"))
         rows.append(
-            f"| {r['name']} | {pattern} | {r['mode']} | "
-            f"{r.get('throttle', '-')} | {nstreams} | "
-            f"{'y' if dbuf else 'n'} | "
-            f"{r['us_per_iter']:.1f} | {r['derived_us_per_iter']:.2f} | "
-            f"{s['puts_per_epoch']:.0f} | {s['resource_high_water']} | "
-            f"{s['critical_path_depth']} | {s['dep_edges']} |")
+            f"| {r.get('name', '?')} | {pattern} | {r.get('mode', '-')} | "
+            f"{r.get('throttle', '-')} | {_num(res, 'd')} | {nstreams} | "
+            f"{'y' if dbuf else 'n'} | {'y' if node_aware else 'n'} | "
+            f"{_num(r.get('us_per_iter'), '.1f')} | "
+            f"{_num(r.get('derived_us_per_iter'), '.2f')} | "
+            f"{_num(s.get('puts_per_epoch'), '.0f')} | "
+            f"{s.get('inter_puts', 0)} | "
+            f"{s.get('resource_high_water', 0)} | "
+            f"{_num(s.get('critical_path_depth'), 'd')} | "
+            f"{s.get('dep_edges', 0)} |")
     return "\n".join(rows)
 
 
