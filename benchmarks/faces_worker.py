@@ -23,6 +23,47 @@ import os
 import sys
 
 
+# per-pattern pattern-output and seedable-input buffer names, shared by
+# every bit-identity verification path (--verify_overlap /
+# --verify_node_aware / --verify_pack)
+VERIFY_OUTPUTS = {"faces": ["acc", "res", "src", "it"],
+                  "ring": ["out"], "a2a": ["out", "aux"]}
+VERIFY_INPUTS = {"faces": ["src"], "ring": ["q", "k", "v"],
+                 "a2a": ["x", "router", "wg", "wu", "wd"]}
+
+
+def seeded_state(stream, win, pattern, seed):
+    """Allocate the stream's state with randomized pattern inputs —
+    zero-initialized state would make any bit-identity comparison
+    vacuous (all-zero outputs match under any schedule bug). Input
+    buffers are never ping-ponged, so seeding the ping key covers
+    double-buffered windows too."""
+    import jax
+    import numpy as np
+    st = stream.allocate()
+    rng = np.random.RandomState(seed)
+    for b in VERIFY_INPUTS[pattern]:
+        k = win.qual(b)
+        val = rng.rand(*st[k].shape).astype(np.asarray(st[k]).dtype) * 0.3
+        st[k] = jax.device_put(val, st[k].sharding)
+    return st
+
+
+def verify_outputs(pattern, what, got_state, got_win, ref_state, ref_win):
+    """Exit nonzero unless every pattern output is bit-identical between
+    the schedule under test and its reference, and non-vacuous."""
+    import numpy as np
+    for b in VERIFY_OUTPUTS[pattern]:
+        got = np.asarray(got_state[got_win.qual(b)])
+        ref = np.asarray(ref_state[ref_win.qual(b)])
+        if not (got == ref).all():
+            sys.exit(f"{what} schedule changed output {b!r} "
+                     f"(max abs diff {abs(got - ref).max()})")
+        if not got.any():
+            sys.exit(f"{what} verification is vacuous: output {b!r} is "
+                     "all-zero despite seeded inputs")
+
+
 def build_kwargs(args, ndev):
     """Per-pattern size mapping from the shared --block knob."""
     if args.pattern == "faces":
@@ -82,6 +123,13 @@ def main():
     ap.add_argument("--verify_node_aware", type=int, default=0,
                     help="also run the naive (non-node-aware) schedule "
                          "and require bit-identical pattern outputs")
+    ap.add_argument("--pack", type=int, default=0,
+                    help="materialize off-node aggregation groups as "
+                         "packed multi-buffer put descriptors "
+                         "(schedule.pack_puts; needs --ranks_per_node)")
+    ap.add_argument("--verify_pack", type=int, default=0,
+                    help="also run the unpacked schedule and require "
+                         "bit-identical pattern outputs")
     ap.add_argument("--name", default=None)
     ap.add_argument("--json-dir", default=None,
                     help="also write a {name}.json record (descriptor "
@@ -133,7 +181,7 @@ def main():
     sched_opts = dict(throttle=throttle, resources=args.resources,
                       merged=merged, ordered=bool(args.ordered),
                       nstreams=nstreams, node_aware=bool(args.node_aware),
-                      coalesce=bool(args.coalesce))
+                      coalesce=bool(args.coalesce), pack=bool(args.pack))
 
     def run_once(st):
         return stream.synchronize(st, mode=args.mode, donate=False,
@@ -156,73 +204,66 @@ def main():
 
     if args.verify_overlap:
         # the overlapped schedule must not change a single output bit vs
-        # the single-stream schedule (both from zeroed state; the
+        # the single-stream schedule on a single-buffered window (the
         # overlapped run reuses this worker's compiled executable)
-        import numpy as np
-        outputs = {"faces": ["acc", "res", "src", "it"],
-                   "ring": ["out"], "a2a": ["out", "aux"]}[args.pattern]
-        got_state = stream.synchronize(stream.allocate(), mode=args.mode,
-                                       donate=False, **sched_opts)
-        got = {b: np.asarray(got_state[win.qual(b)]) for b in outputs}
+        got_state = stream.synchronize(
+            seeded_state(stream, win, args.pattern, 0), mode=args.mode,
+            donate=False, **sched_opts)
         ref_stream = STStream(mesh, pat.grid_axes)
         ref_win, _ = pat.build(ref_stream, args.niter,
                                merged=bool(args.merged),
                                double_buffer=False,
                                **build_kwargs(args, ndev))
         ref_state = ref_stream.synchronize(
-            ref_stream.allocate(), mode=args.mode, donate=False,
-            **dict(sched_opts, nstreams=1))
-        ref = {b: np.asarray(ref_state[ref_win.qual(b)]) for b in outputs}
-        for b in outputs:
-            if not (got[b] == ref[b]).all():
-                sys.exit(f"overlap schedule changed output {b!r} "
-                         f"(max abs diff {abs(got[b] - ref[b]).max()})")
+            seeded_state(ref_stream, ref_win, args.pattern, 0),
+            mode=args.mode, donate=False, **dict(sched_opts, nstreams=1))
+        verify_outputs(args.pattern, "overlap", got_state, win,
+                       ref_state, ref_win)
         print(f"# overlap-verified {args.pattern} nstreams={nstreams} "
-              f"double_buffer={int(double_buffer)} outputs={outputs}")
+              f"double_buffer={int(double_buffer)} "
+              f"outputs={VERIFY_OUTPUTS[args.pattern]}")
 
     if args.verify_node_aware:
         # the node-aware ordering must not change a single output bit vs
-        # the naive schedule (same DAG, different emission order). Both
-        # runs start from the SAME randomized inputs — zero-initialized
-        # state would make the comparison vacuous (all-zero outputs
-        # match under any schedule bug).
-        import jax
-        import numpy as np
+        # the naive schedule (same DAG, different emission order)
         if not args.node_aware:
             sys.exit("--verify_node_aware without --node_aware compares "
                      "the naive schedule against itself")
-        outputs = {"faces": ["acc", "res", "src", "it"],
-                   "ring": ["out"], "a2a": ["out", "aux"]}[args.pattern]
-        inputs = {"faces": ["src"], "ring": ["q", "k", "v"],
-                  "a2a": ["x", "router", "wg", "wu", "wd"]}[args.pattern]
-
-        def seeded_state():
-            st = stream.allocate()
-            rng = np.random.RandomState(0)
-            for b in inputs:
-                k = win.qual(b)
-                val = rng.rand(*st[k].shape).astype(
-                    np.asarray(st[k]).dtype) * 0.3
-                st[k] = jax.device_put(val, st[k].sharding)
-            return st
-
-        got_state = stream.synchronize(seeded_state(), mode=args.mode,
-                                       donate=False, **sched_opts)
+        got_state = stream.synchronize(
+            seeded_state(stream, win, args.pattern, 0), mode=args.mode,
+            donate=False, **sched_opts)
         naive_state = stream.synchronize(
-            seeded_state(), mode=args.mode, donate=False,
+            seeded_state(stream, win, args.pattern, 0), mode=args.mode,
+            donate=False,
             **dict(sched_opts, node_aware=False, coalesce=False))
-        for b in outputs:
-            got = np.asarray(got_state[win.qual(b)])
-            ref = np.asarray(naive_state[win.qual(b)])
-            if not (got == ref).all():
-                sys.exit(f"node-aware schedule changed output {b!r} "
-                         f"(max abs diff {abs(got - ref).max()})")
-            if not np.asarray(got).any():
-                sys.exit(f"node-aware verification is vacuous: output "
-                         f"{b!r} is all-zero despite seeded inputs")
+        verify_outputs(args.pattern, "node-aware", got_state, win,
+                       naive_state, win)
         print(f"# node-aware-verified {args.pattern} "
               f"ranks_per_node={args.ranks_per_node} "
-              f"coalesce={args.coalesce} outputs={outputs}")
+              f"coalesce={args.coalesce} "
+              f"outputs={VERIFY_OUTPUTS[args.pattern]}")
+
+    if args.verify_pack:
+        # the packed schedule (multi-buffer descriptors riding one
+        # collective each) must not change a single output bit vs the
+        # unpacked schedule
+        if not args.pack:
+            sys.exit("--verify_pack without --pack compares the unpacked "
+                     "schedule against itself")
+        got_state = stream.synchronize(
+            seeded_state(stream, win, args.pattern, 1), mode=args.mode,
+            donate=False, **sched_opts)
+        ref_state = stream.synchronize(
+            seeded_state(stream, win, args.pattern, 1), mode=args.mode,
+            donate=False, **dict(sched_opts, pack=False))
+        verify_outputs(args.pattern, "packed", got_state, win,
+                       ref_state, win)
+        if not any(len(p.srcs) > 1 for prog in progs for p in prog.puts()):
+            sys.exit("pack verification is vacuous: the packed schedule "
+                     "contains no packed multi-buffer descriptor")
+        print(f"# pack-verified {args.pattern} "
+              f"ranks_per_node={args.ranks_per_node} "
+              f"outputs={VERIFY_OUTPUTS[args.pattern]}")
 
     stats = progs[0].stats()
     stats["segments"] = len(progs)
@@ -231,6 +272,7 @@ def main():
     print(f"{name},{us_per_iter:.1f},{derived:.2f}")
     print(f"#stats {name} pattern={stats['pattern']} "
           f"puts_per_epoch={stats['puts_per_epoch']:.0f} "
+          f"packed_puts={stats['packed_puts']} "
           f"inter_puts={stats['inter_puts']} "
           f"resource_high_water={stats['resource_high_water']} "
           f"critical_path_depth={stats['critical_path_depth']} "

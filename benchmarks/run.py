@@ -21,18 +21,28 @@ Sections:
          2-node ranks_per_node mappings, naive vs node-aware ordering)
          plus one executor worker per pattern verifying the node-aware
          schedule bit-identical in-process
+  pack   materialized put aggregation: packed multi-buffer descriptors
+         (schedule.pack_puts) vs the unpacked schedule over the same
+         sweep grid, plus one executor worker per pattern verifying the
+         packed schedule bit-identical in-process
   roofline  per (arch x shape x mesh) terms from results/dryrun
   throughput  tiny-config train tokens/s
 
 Worker failures are COUNTED and the harness exits nonzero (CI gates on
 this). ``--json PATH`` writes every parsed row + failures + invariant
-checks as one JSON record; ``--check-invariants`` asserts the Fig. 13
+checks as one JSON record AND a repo-root ``BENCH_5.json`` perf-
+trajectory record (row-name -> derived latency, rows, invariants) that
+CI uploads so future PRs can diff derived numbers;
+``--check-invariants`` asserts the Fig. 13
 structural ordering adaptive <= static <= application, the overlap
-rule (nstreams=2 + double_buffer derived cost <= single stream), and
-the topology rules over the sweep grid (derived cost monotone in
+rule (nstreams=2 + double_buffer derived cost <= single stream), the
+topology rules over the sweep grid (derived cost monotone in
 payload bytes, inter-node link strictly costlier than intra-node,
 multi-node mapping never cheaper than single-node, node-aware ordering
-never costlier than naive) for every ST pattern. ``BENCH_SMOKE=1``
+never costlier than naive), and the aggregation rules (packed derived
+latency <= unpacked per pattern/link, packing the identity on single-
+node topologies, packed descriptor counts exactly as the group
+structure predicts) for every ST pattern. ``BENCH_SMOKE=1``
 keeps only the small-grid configs (CI), ``BENCH_NITER`` overrides
 iterations per worker.
 """
@@ -95,7 +105,8 @@ def _worker(section="", **kw):
                                     "ranks_per_node": int(
                                         kw.get("ranks_per_node", 0)),
                                     "node_aware": bool(int(
-                                        kw.get("node_aware", 0)))})
+                                        kw.get("node_aware", 0))),
+                                    "pack": bool(int(kw.get("pack", 0)))})
                 except ValueError:
                     pass
     return True
@@ -202,11 +213,25 @@ def _sweep_size_kw(pat, block):
             "a2a": dict(seq=block)}[pat]
 
 
+def _mode_tag(node_aware, coalesce, pack):
+    tag = "na" if node_aware else "naive"
+    if node_aware and not coalesce:
+        tag += "_nc"
+    if pack:
+        tag += "_pk"
+    return tag
+
+
 def _sweep_points():
-    """Device-free message-size x topology grid shared by the ``sweep``
-    section and ``check_invariants``: derived cost + bytes/epoch per
-    (pattern, block, ranks_per_node, node_aware) point, adaptive/merged
-    (the off-node regime the node-aware pass targets)."""
+    """Device-free message-size x topology grid shared by the ``sweep``/
+    ``pack`` sections and ``check_invariants``: derived cost +
+    bytes/epoch + descriptor counts per (pattern, block, ranks_per_node,
+    node_aware, coalesce, pack) point, adaptive/merged (the off-node
+    regime the node-aware and aggregation passes target). The pack
+    points pair with a coalesce=False baseline on purpose: materialized
+    packing replaces the marked-aggregation alpha waiver (the simulator-
+    only approximation PR 4 shipped), so the fair unpacked comparison is
+    the unmarked schedule."""
     global _SWEEP_CACHE
     if _SWEEP_CACHE is not None:
         return _SWEEP_CACHE
@@ -221,23 +246,31 @@ def _sweep_points():
     points = []
     for pat, grid in _SWEEP_GRIDS.items():
         for rpn in (None, _SWEEP_RPN[pat]):
-            # node-aware ordering only exists on a multi-node topology
-            modes = [(False, False)] if rpn is None \
-                else [(False, False), (True, True)]
-            for node_aware, coalesce in modes:
+            # node-aware ordering only exists on a multi-node topology;
+            # packing only fires on off-node groups, so the single-node
+            # pack point is the identity check (intra link: equal cost)
+            modes = [(False, False, False), (False, False, True)] \
+                if rpn is None \
+                else [(False, False, False), (True, True, False),
+                      (True, False, False), (True, False, True)]
+            for node_aware, coalesce, pack in modes:
                 for b in blocks[pat]:
                     progs = pattern_programs(
                         pat, niter, grid=grid, throttle="adaptive",
                         resources=8, ranks_per_node=rpn,
                         node_aware=node_aware, coalesce=coalesce,
-                        **_sweep_size_kw(pat, b))
+                        pack=pack, **_sweep_size_kw(pat, b))
                     derived = simulate_pipeline(progs, CostModel()) / niter
                     s = progs[0].stats()
                     points.append(dict(
                         pattern=pat, block=b,
                         bytes_per_epoch=s["bytes_per_epoch"],
                         inter_puts=s["inter_puts"],
+                        puts_per_epoch=s["puts_per_epoch"],
+                        packed_puts=s["packed_puts"],
+                        put_buffers=s["put_buffers"],
                         ranks_per_node=rpn or 0, node_aware=node_aware,
+                        coalesce=coalesce, pack=pack,
                         derived=derived))
     _SWEEP_CACHE = points
     return points
@@ -251,18 +284,7 @@ def sweep():
     bit-identical to the naive one in-process."""
     print("# sweep: message-size x topology derived latency curves "
           "(adaptive, R=8; rpn = ranks per node)")
-    for p in _sweep_points():
-        tag = "na" if p["node_aware"] else "naive"
-        name = (f"sweep_{p['pattern']}_b{p['block']}"
-                f"_rpn{p['ranks_per_node']}_{tag}")
-        print(f"{name},0.0,{p['derived']:.2f}")
-        RESULTS.append(dict(section="sweep", name=name, us_per_call=0.0,
-                            derived=p["derived"], nstreams=1,
-                            double_buffer=False, **{
-                                k: p[k] for k in
-                                ("pattern", "block", "bytes_per_epoch",
-                                 "inter_puts", "ranks_per_node",
-                                 "node_aware")}))
+    _sweep_rows("sweep")
     for pat, grid in _SWEEP_GRIDS.items():
         kw = dict(pattern=pat) if pat != "faces" else {}
         _worker("sweep", mode="st", throttle="adaptive", merged=1,
@@ -270,6 +292,55 @@ def sweep():
                 grid=",".join(str(g) for g in grid),
                 ranks_per_node=_SWEEP_RPN[pat], node_aware=1, coalesce=1,
                 verify_node_aware=1, name=f"sweep_{pat}_nodeaware_exec",
+                **kw)
+
+
+def _sweep_rows(section):
+    """Print + record the sweep-grid rows belonging to ``section``:
+    "sweep" keeps its pre-aggregation point set (naive + node-aware/
+    coalesce-marked) so row names stay diffable across PRs; "pack" owns
+    every materialized-aggregation point plus its unpacked
+    (coalesce=False) baseline."""
+    rows = []
+    for p in _sweep_points():
+        in_pack = p["pack"] or (p["node_aware"] and not p["coalesce"])
+        if (section == "pack") != in_pack:
+            continue
+        tag = _mode_tag(p["node_aware"], p["coalesce"], p["pack"])
+        name = (f"sweep_{p['pattern']}_b{p['block']}"
+                f"_rpn{p['ranks_per_node']}_{tag}")
+        print(f"{name},0.0,{p['derived']:.2f}")
+        row = dict(section=section, name=name, us_per_call=0.0,
+                   derived=p["derived"], nstreams=1,
+                   double_buffer=False, **{
+                       k: p[k] for k in
+                       ("pattern", "block", "bytes_per_epoch",
+                        "inter_puts", "puts_per_epoch", "packed_puts",
+                        "ranks_per_node", "node_aware", "coalesce",
+                        "pack")})
+        RESULTS.append(row)
+        rows.append(row)
+    return rows
+
+
+def pack():
+    """Materialized put aggregation sweep: packed multi-buffer
+    descriptors (schedule.pack_puts) vs the unpacked schedule, per
+    pattern and link class — device-free derived curves from the shared
+    sweep grid, plus one executor worker per pattern verifying the
+    packed schedule bit-identical to the unpacked one in-process
+    (run_compiled path; the packed-vs-unpacked host path is covered by
+    tests/test_pack.py)."""
+    print("# pack: materialized put aggregation (packed multi-buffer "
+          "descriptors) vs unpacked, adaptive R=8")
+    _sweep_rows("pack")
+    for pat, grid in _SWEEP_GRIDS.items():
+        kw = dict(pattern=pat) if pat != "faces" else {}
+        _worker("pack", mode="st", throttle="adaptive", merged=1,
+                resources=8, block=8 if pat == "faces" else 16,
+                grid=",".join(str(g) for g in grid),
+                ranks_per_node=_SWEEP_RPN[pat], node_aware=1,
+                pack=1, verify_pack=1, name=f"pack_{pat}_exec",
                 **kw)
 
 
@@ -388,23 +459,29 @@ def check_topology_invariants():
     points = _sweep_points()
     curves = {}
     for p in points:
-        key = (p["pattern"], p["ranks_per_node"], p["node_aware"])
+        key = (p["pattern"], p["ranks_per_node"], p["node_aware"],
+               p["coalesce"], p["pack"])
         curves.setdefault(key, []).append(p)
-    for (pat, rpn, na), pts in sorted(curves.items()):
+    for (pat, rpn, na, co, pk), pts in sorted(curves.items()):
         pts = sorted(pts, key=lambda p: p["bytes_per_epoch"])
         mono = all(a["derived"] <= b["derived"] + eps
                    for a, b in zip(pts, pts[1:]))
         checks.append(dict(rule="monotone_bytes", pattern=pat, ok=mono,
                            ranks_per_node=rpn, node_aware=na,
+                           coalesce=co, pack=pk,
                            derived=[p["derived"] for p in pts]))
         curve = " -> ".join(f"{p['derived']:.1f}" for p in pts)
-        print(f"# invariant monotone {pat} rpn={rpn} na={int(na)}: "
+        print(f"# invariant monotone {pat} rpn={rpn} "
+              f"{_mode_tag(na, co, pk)}: "
               f"{curve} -> {'OK' if mono else 'VIOLATED'}")
     by_cfg = {(p["pattern"], p["block"], p["ranks_per_node"],
-               p["node_aware"]): p["derived"] for p in points}
-    for (pat, block, rpn, na), derived in sorted(by_cfg.items()):
+               p["node_aware"], p["coalesce"], p["pack"]): p["derived"]
+              for p in points}
+    for (pat, block, rpn, na, co, pk), derived in sorted(by_cfg.items()):
+        if pk or (na and not co):
+            continue         # the pack points have their own rules below
         if rpn and not na:
-            single = by_cfg[(pat, block, 0, False)]
+            single = by_cfg[(pat, block, 0, False, False, False)]
             ok = derived >= single - eps
             checks.append(dict(rule="internode_geq", pattern=pat, ok=ok,
                                block=block, multi=derived, single=single))
@@ -413,7 +490,7 @@ def check_topology_invariants():
                       f"multi={derived:.2f} < single={single:.2f} "
                       "-> VIOLATED")
         if rpn and na:
-            naive = by_cfg[(pat, block, rpn, False)]
+            naive = by_cfg[(pat, block, rpn, False, False, False)]
             ok = derived <= naive + eps
             checks.append(dict(rule="node_aware", pattern=pat, ok=ok,
                                block=block, node_aware=derived,
@@ -421,13 +498,83 @@ def check_topology_invariants():
             print(f"# invariant node_aware {pat} b{block}: "
                   f"{derived:.2f} <= naive={naive:.2f} -> "
                   f"{'OK' if ok else 'VIOLATED'}")
+    checks += check_pack_invariants(points, by_cfg, eps)
+    return checks
+
+
+# per-pattern packed-descriptor counts on the sweep topologies with
+# throttle="none" (every put dependency-free): ring packs its K,V pair
+# (2 -> 1 put/epoch), a2a packs partial+aux per shift (2(n-1) -> n-1),
+# faces on the (2,2,2)/rpn=4 grid packs the 18 off-node surface puts
+# into 4 same-permutation descriptors (+ 8 on-node singles = 12)
+_PACK_EXPECT = {"faces": (26.0, 12.0), "ring": (2.0, 1.0),
+                "a2a": (6.0, 3.0)}
+
+
+def check_pack_invariants(points, by_cfg, eps):
+    """Materialized-aggregation invariants over the sweep grid: the
+    packed schedule's derived latency never exceeds its unpacked
+    (coalesce=False) baseline at any point; packing is the identity on
+    a single-node (all-intra) topology; and the derived put-descriptor
+    count per multi-buffer epoch drops exactly as the group structure
+    predicts (ring K,V -> 1, a2a partial+aux -> 1 per shift, faces
+    same-permutation multi-face groups)."""
+    from repro.core.patterns import pattern_programs
+
+    checks = []
+    print("# invariants: packed <= unpacked per pattern/link; packed "
+          "descriptor counts (ring 2->1, a2a 2(n-1)->n-1 puts/epoch)")
+    for (pat, block, rpn, na, co, pk), derived in sorted(by_cfg.items()):
+        if not pk:
+            continue
+        base = by_cfg[(pat, block, rpn, na, co, False)]
+        if rpn:
+            ok = derived <= base + eps
+            rule = "pack_latency"
+            rel = "<="
+        else:
+            # intra link: nothing packs, so the cost must be IDENTICAL
+            ok = abs(derived - base) <= eps
+            rule = "pack_intra_identity"
+            rel = "=="
+        checks.append(dict(rule=rule, pattern=pat, ok=ok, block=block,
+                           ranks_per_node=rpn, packed=derived,
+                           unpacked=base))
+        print(f"# invariant {rule} {pat} b{block} rpn={rpn}: "
+              f"{derived:.2f} {rel} unpacked={base:.2f} -> "
+              f"{'OK' if ok else 'VIOLATED'}")
+    for pat, grid in _SWEEP_GRIDS.items():
+        unpacked_ppe, packed_ppe = _PACK_EXPECT[pat]
+        stats = {}
+        for pk in (False, True):
+            progs = pattern_programs(
+                pat, 2, grid=grid, throttle="none",
+                ranks_per_node=_SWEEP_RPN[pat], pack=pk,
+                **_sweep_size_kw(pat, 4 if pat == "faces" else 16))
+            stats[pk] = progs[0].stats()
+        ok = (stats[False]["puts_per_epoch"] == unpacked_ppe
+              and stats[True]["puts_per_epoch"] == packed_ppe
+              and stats[True]["packed_puts"] > 0
+              and stats[True]["put_buffers"] == stats[False]["puts"])
+        checks.append(dict(
+            rule="pack_descriptor_count", pattern=pat, ok=ok,
+            unpacked_puts_per_epoch=stats[False]["puts_per_epoch"],
+            packed_puts_per_epoch=stats[True]["puts_per_epoch"],
+            expected=list(_PACK_EXPECT[pat]),
+            packed_descriptors=stats[True]["packed_puts"]))
+        print(f"# invariant pack_count {pat}: puts/epoch "
+              f"{stats[False]['puts_per_epoch']:.0f} -> "
+              f"{stats[True]['puts_per_epoch']:.0f} "
+              f"(expect {unpacked_ppe:.0f} -> {packed_ppe:.0f}) -> "
+              f"{'OK' if ok else 'VIOLATED'}")
     return checks
 
 
 SECTIONS = {
     "fig12": fig12, "fig13": fig13, "fig14": fig14, "fig15": fig15,
     "fig16_17": fig16_17, "ring": ring, "a2a": a2a, "overlap": overlap,
-    "sweep": sweep, "roofline": roofline, "throughput": throughput,
+    "sweep": sweep, "pack": pack, "roofline": roofline,
+    "throughput": throughput,
 }
 
 
@@ -461,6 +608,21 @@ def main() -> None:
             json.dump(rec, f, indent=1)
         print(f"# wrote {args.json} ({len(RESULTS)} rows, "
               f"{len(FAILURES)} failures)")
+        # the perf trajectory: a repo-root record future PRs diff derived
+        # numbers against (CI uploads it as an artifact) — a map from row
+        # name to derived latency plus the full rows and invariant
+        # verdicts, so regressions show up as a one-line diff instead of
+        # flying blind
+        traj = os.path.join(ROOT, "BENCH_5.json")
+        with open(traj, "w") as f:
+            json.dump({"bench_id": "BENCH_5", "sections": names,
+                       "derived": {r["name"]: r["derived"]
+                                   for r in RESULTS},
+                       "rows": RESULTS,
+                       "invariants": checks,
+                       "failures": FAILURES,
+                       "env": rec["env"]}, f, indent=1)
+        print(f"# wrote {traj}")
 
     if FAILURES:
         print(f"# {len(FAILURES)} worker(s) FAILED", file=sys.stderr)

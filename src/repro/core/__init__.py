@@ -16,8 +16,9 @@ from repro.core.patterns import (PatternTopology, STPattern,
                                  available_patterns, build_pattern,
                                  get_pattern, pattern_programs,
                                  register_pattern, simulate_pattern)
-from repro.core.schedule import (assign_streams, node_aware_pass, schedule,
-                                 stream_interleaved_order, validate_deps)
+from repro.core.schedule import (assign_streams, node_aware_pass, pack_puts,
+                                 schedule, stream_interleaved_order,
+                                 validate_deps)
 from repro.core.throttle import (CostModel, faces_programs, simulate_faces,
                                  simulate_pipeline, simulate_program)
 from repro.core import halo
@@ -25,7 +26,7 @@ from repro.core import halo
 __all__ = ["STStream", "STWindow", "TriggeredOp", "TriggeredProgram",
            "ResourcePool", "CostModel", "PatternTopology", "STPattern",
            "counters_expected", "lower_segment", "split_segments",
-           "schedule", "assign_streams", "node_aware_pass",
+           "schedule", "assign_streams", "node_aware_pass", "pack_puts",
            "stream_interleaved_order",
            "validate_deps", "register_pattern", "get_pattern",
            "available_patterns", "build_pattern", "pattern_programs",

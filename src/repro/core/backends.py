@@ -18,6 +18,12 @@ passes produced (the third consumer is the cost simulator in
     the MPI runtime's completion handling; dependency edges are implicit
     in the serialized dispatch order and are not re-emitted.
 
+Packed multi-buffer descriptors (schedule.pack_puts) are ONE node and
+therefore one emission unit in both executors: run_compiled traces
+pack -> single ppermute -> unpack (fewer collectives and barrier ties
+in the HLO), run_host issues one dispatch for the whole group — the
+host-dispatch saving behind the paper's off-node P2P gap.
+
 Signals and completions are REAL counter buffers updated by chained tiny
 puts (paper §3.1–3.2), so tests can assert the epoch protocol.
 """
@@ -27,10 +33,12 @@ from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.compat import shard_map
 from repro.core.schedule import stream_interleaved_order
 from repro.core.window import is_counter_name
+from repro.kernels.halo_pack.ref import pack_flat, unpack_flat
 
 
 def _tie(x, dep):
@@ -69,12 +77,21 @@ def _local_rank(stream):
 def _arrival_mask(stream, direction):
     """1 where this rank RECEIVES a payload sent in ``direction`` —
     non-periodic boundary ranks have no source and must not see a
-    completion bump."""
-    import numpy as np
-    recv = np.zeros((stream.num_ranks,), np.int32)
-    for _, dst in stream.perm_for(tuple(direction)):
-        recv[dst] = 1
-    return recv
+    completion bump. Memoized on the stream: the mask depends only on
+    the grid and direction, and rebuilding it per emitted put made
+    trace time scale with put count (packed puts make it hot — every
+    packed completion signal consults its group's mask)."""
+    cache = getattr(stream, "_arrival_mask_cache", None)
+    if cache is None:
+        cache = stream._arrival_mask_cache = {}
+    key = tuple(direction)
+    mask = cache.get(key)
+    if mask is None:
+        recv = np.zeros((stream.num_ranks,), np.int32)
+        for _, dst in stream.perm_for(key):
+            recv[dst] = 1
+        mask = cache[key] = recv
+    return mask
 
 
 def _emit_completion_signal(stream, node, st, arrival_token):
@@ -147,12 +164,27 @@ def emit_node(stream, node, st, ctx, *, with_chained=True):
         ctx.trig[(node.window, node.epoch)] = snap
         ctx.tokens[node.op_id] = snap.ravel()[:1]
     elif node.kind == "put":
-        payload = st[node.src]
+        if len(node.srcs) > 1:
+            # packed multi-buffer descriptor (schedule.pack_puts): pack
+            # the group's payloads into ONE contiguous staging buffer,
+            # ride ONE collective (every member shares the same rank
+            # permutation, so one ppermute moves the whole group), and
+            # unpack into the destination buffers on arrival — a pure
+            # byte reshuffle, bit-identical to the unpacked puts
+            payload = pack_flat([st[s] for s in node.srcs])
+        else:
+            payload = st[node.src]
         payload = _tie(payload, ctx.trig.get((node.window, node.epoch)))
         for dep in node.deps:
             payload = _tie(payload, ctx.tokens.get(dep))
         arrived = _ppermute(stream, payload, node.direction)
-        st[node.dst] = arrived
+        if len(node.srcs) > 1:
+            for dst, part in zip(node.dsts,
+                                 unpack_flat(arrived,
+                                             [st[d] for d in node.dsts])):
+                st[dst] = part
+        else:
+            st[node.dst] = arrived
         token = arrived.ravel()[:1]
         ctx.tokens[node.op_id] = token
         if with_chained and node.chained is not None:

@@ -267,11 +267,15 @@ def build_moe_a2a_program(stream, niter, *, cfg=None, batch=1, seq=8,
 
 
 def moe_a2a_st(cfg, params, x, mesh, *, axis="model", mode="st",
-               throttle="adaptive", resources=64, merged=True, rules=None):
+               throttle="adaptive", resources=64, merged=True, rules=None,
+               ranks_per_node=None, pack=False):
     """Expert-parallel MoE executed THROUGH the ST pipeline (lower ->
     schedule -> compiled/host backend): the psum combine becomes the
     aggregated-put access epoch. Numerically equivalent to
-    :func:`moe_a2a` on a pure expert-parallel mesh. x: (B,S,D)."""
+    :func:`moe_a2a` on a pure expert-parallel mesh. x: (B,S,D).
+    ``ranks_per_node``/``pack`` select the multi-node topology and
+    materialized put aggregation: each shift's partial+aux pair rides
+    ONE packed multi-buffer descriptor instead of two puts."""
     from repro.core.stream import STStream
 
     dt = x.dtype
@@ -281,7 +285,8 @@ def moe_a2a_st(cfg, params, x, mesh, *, axis="model", mode="st",
     F = cfg.moe.expert_ff
     stream = STStream(mesh, (axis,))
     win, _ = build_moe_a2a_program(stream, 1, cfg=cfg, batch=B, seq=S,
-                                   dtype=dt)
+                                   dtype=dt,
+                                   ranks_per_node=ranks_per_node)
     state = stream.allocate()
     fills = {
         # tokens + router replicated; each shard owns its experts' slice
@@ -297,7 +302,7 @@ def moe_a2a_st(cfg, params, x, mesh, *, axis="model", mode="st",
         state[key] = jax.device_put(val, state[key].sharding)
     state = stream.synchronize(state, mode=mode, throttle=throttle,
                                resources=resources, merged=merged,
-                               donate=False)
+                               donate=False, pack=pack)
     out = state[win.qual("out")][0]           # every rank holds the sum
     aux = state[win.qual("aux")][0, 0]
     if cfg.moe.num_shared:

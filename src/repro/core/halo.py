@@ -237,7 +237,13 @@ def build_faces_program(stream, n, niter, merged=True, kernels=None,
     (``nstreams>1``) can run epoch e+1's transfers during epoch e's
     compute. ``ranks_per_node`` sets the hardware node mapping on the
     window topology: each direction's put lowers with an intra/inter
-    link tag. Returns (window, kernels)."""
+    link tag. With ``pack`` scheduling (schedule.pack_puts) the epoch's
+    multi-face groups aggregate: every set of off-node directions whose
+    rank permutations coincide (on a size-2 periodic axis +1 and -1 are
+    the SAME shift, so e.g. on a (2,2,2) grid with ranks_per_node=4 the
+    18 off-node surface puts ride 4 packed descriptors, one per moved
+    axis set) becomes one packed multi-buffer descriptor.
+    Returns (window, kernels)."""
     stream.pattern = stream.pattern or "faces"
     win = create_faces_window(stream, n, name=name,
                               extra_buffers=extra_buffers,

@@ -14,7 +14,12 @@ descriptors with named trigger/completion counter slots:
               (the ST executor fires enqueued descriptors at the trigger
               event complete() emits). Each put carries its §3.2 chained
               completion signal bumping ``win.comp_sig[opposite(d)]`` on
-              the target.
+              the target, plus the GROUP identity the pack_puts schedule
+              pass aggregates multi-buffer descriptors by: its full rank
+              permutation (``perm``), source dtype, and real byte size —
+              so a packed group's single chained signal stands for the
+              whole group and the wait's ``expected_puts`` can be
+              recounted per descriptor, not per buffer.
   * complete -> emits the epoch's deferred puts, then an epoch-close
               marker; the global epoch index increments here.
   * wait   -> a wait-kernel descriptor polling the completion counter.
@@ -35,29 +40,44 @@ import numpy as np
 from repro.core.triggered import TriggeredOp, TriggeredProgram
 
 
-def buffer_nbytes(stream, qualified: str) -> int:
-    """Per-rank byte size of a window buffer like ``"faces.send101"``
-    (pong keys resolve to their ping buffer's size)."""
+def buffer_spec(stream, qualified: str):
+    """(nbytes, dtype_name) of a window buffer like ``"faces.send101"``
+    (pong keys resolve to their ping buffer's spec); (0, "") when no
+    window owns the key. The dtype is threaded onto put nodes so the
+    pack_puts schedule pass only merges byte-compatible payloads into
+    one staging buffer."""
     for win in stream.windows.values():
         prefix = win.name + "."
         if qualified.startswith(prefix):
-            base = win.base_buffer(qualified[len(prefix):])
-            if base in win.buffers:
-                shape, dtype = win.buffers[base]
-                return int(np.prod(shape)) * np.dtype(dtype).itemsize
-    return 0
+            spec = win.spec_of(qualified[len(prefix):])
+            if spec is not None:
+                shape, dtype = spec
+                nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
+                return nbytes, np.dtype(dtype).name
+    return 0, ""
+
+
+def buffer_nbytes(stream, qualified: str) -> int:
+    """Per-rank byte size of a window buffer (see :func:`buffer_spec`)."""
+    return buffer_spec(stream, qualified)[0]
 
 
 def put_link(stream, win, direction):
-    """(link, node_deltas) of a put in ``direction`` on ``win``: the
-    window topology's node mapping (``ranks_per_node``) classifies the
-    put as on-node ("intra", xGMI) or off-node ("inter", through the
-    NIC) over the direction's full rank permutation. Windows without a
-    topology (or without a node mapping) are single-node: "intra"."""
+    """(link, node_deltas, perm) of a put in ``direction`` on ``win``:
+    the window topology's node mapping (``ranks_per_node``) classifies
+    the put as on-node ("intra", xGMI) or off-node ("inter", through the
+    NIC) over the direction's full rank permutation — which is also
+    returned (as a hashable tuple): two puts with EQUAL permutations
+    move their payloads between identical rank pairs, the exact identity
+    the pack_puts pass groups multi-buffer descriptors by. Windows
+    without a topology (or without a node mapping) are single-node:
+    "intra"."""
+    perm = tuple(map(tuple, stream.perm_for(tuple(direction))))
     topo = getattr(win, "topology", None)
     if topo is None or not getattr(topo, "ranks_per_node", None):
-        return "intra", ()
-    return topo.link_of(stream.perm_for(tuple(direction)))
+        return "intra", (), perm
+    link, deltas = topo.link_of(list(perm))
+    return link, deltas, perm
 
 
 def lower_segment(stream, seg) -> TriggeredProgram:
@@ -107,11 +127,12 @@ def lower_segment(stream, seg) -> TriggeredProgram:
                 direction=d, slot=slot,
                 counter=win.comp_sig_at(op.phase), wire=True,
                 phase=op.phase, label=f"comp{d}")
-            link, deltas = put_link(stream, win, d)
+            link, deltas, perm = put_link(stream, win, d)
+            nbytes, dtype = buffer_spec(stream, op.put["src"])
             pending.setdefault(win.name, []).append(TriggeredOp(
                 "put", window=win.name, src=op.put["src"],
                 dst=op.put["dst"], direction=d,
-                nbytes=buffer_nbytes(stream, op.put["src"]),
+                nbytes=nbytes, dtype=dtype, perm=perm,
                 link=link, node_deltas=deltas,
                 trigger_counter=(f"{win.post_sig_at(op.phase)}"
                                  f"[{win.group.index(d)}]"),

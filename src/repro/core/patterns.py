@@ -187,6 +187,7 @@ def pattern_programs(name: str, niter: int, *, grid=None,
                      double_buffer: bool = False,
                      ranks_per_node: Optional[int] = None,
                      node_aware: bool = False, coalesce: bool = False,
+                     pack: bool = False,
                      **build_kw):
     """Lower+schedule a pattern on a device-free stream — the same
     builder and passes the executors use, minus a mesh. ``nstreams>1``
@@ -196,7 +197,8 @@ def pattern_programs(name: str, niter: int, *, grid=None,
     sets the hardware node mapping on the pattern topology (puts get
     intra/inter link tags); ``node_aware``/``coalesce`` run the
     node-aware schedule pass (off-node puts first, optional same-target-
-    node aggregation)."""
+    node aggregation); ``pack`` materializes off-node aggregation groups
+    as packed multi-buffer put descriptors (schedule.pack_puts)."""
     from repro.core.stream import STStream
 
     p = get_pattern(name)
@@ -209,7 +211,7 @@ def pattern_programs(name: str, niter: int, *, grid=None,
                                      merged=merged, ordered=ordered,
                                      nstreams=nstreams,
                                      node_aware=node_aware,
-                                     coalesce=coalesce)
+                                     coalesce=coalesce, pack=pack)
 
 
 def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
@@ -219,6 +221,7 @@ def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
                      double_buffer: bool = False,
                      ranks_per_node: Optional[int] = None,
                      node_aware: bool = False, coalesce: bool = False,
+                     pack: bool = False,
                      **build_kw) -> float:
     """Derived critical-path time of ``niter`` pattern iterations.
 
@@ -229,7 +232,10 @@ def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
     select the overlapped multi-stream schedule (the simulator walks one
     timeline per stream). ``ranks_per_node`` prices off-node puts on the
     inter-node link (with serialized NIC injection);
-    ``node_aware``/``coalesce`` apply the node-aware ordering pass."""
+    ``node_aware``/``coalesce`` apply the node-aware ordering pass;
+    ``pack`` materializes off-node aggregation groups as packed
+    multi-buffer descriptors (one alpha + summed beta + one NIC
+    injection per group)."""
     from repro.core.throttle import simulate_pipeline
 
     host_sync_every = 1 if policy == "application" else 0
@@ -241,5 +247,6 @@ def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
                              nstreams=nstreams, double_buffer=double_buffer,
                              ranks_per_node=ranks_per_node,
                              node_aware=node_aware, coalesce=coalesce,
+                             pack=pack,
                              **build_kw)
     return simulate_pipeline(progs, cm, host_orchestrated)

@@ -257,10 +257,13 @@ def build_ring_program(stream, niter, *, batch=1, seq_per_rank=8, heads=2,
 
 def ring_attention_st(q, k, v, *, mesh, axis="data", causal=True,
                       mode="st", throttle="adaptive", resources=64,
-                      merged=True):
+                      merged=True, ranks_per_node=None, pack=False):
     """Ring attention executed THROUGH the ST pipeline (lower -> schedule
     -> compiled/host backend) instead of the direct shard_map scan.
-    Numerically equivalent to :func:`ring_attention_train`."""
+    Numerically equivalent to :func:`ring_attention_train`.
+    ``ranks_per_node``/``pack`` select the multi-node topology and
+    materialized put aggregation: each ring step's K,V pair rides ONE
+    packed multi-buffer descriptor instead of two puts."""
     from repro.core.stream import STStream
 
     B, S, H, hd = q.shape
@@ -269,7 +272,8 @@ def ring_attention_st(q, k, v, *, mesh, axis="data", causal=True,
     stream = STStream(mesh, (axis,))
     win, _ = build_ring_program(stream, 1, batch=B, seq_per_rank=S_l,
                                 heads=H, head_dim=hd, causal=causal,
-                                dtype=q.dtype)
+                                dtype=q.dtype,
+                                ranks_per_node=ranks_per_node)
     state = stream.allocate()
 
     def blocks(x):
@@ -281,6 +285,6 @@ def ring_attention_st(q, k, v, *, mesh, axis="data", causal=True,
         state[key] = jax.device_put(blocks(arr), state[key].sharding)
     state = stream.synchronize(state, mode=mode, throttle=throttle,
                                resources=resources, merged=merged,
-                               donate=False)
+                               donate=False, pack=pack)
     out = state[win.qual("out")]                  # (n, B, S_l, H, hd)
     return jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)

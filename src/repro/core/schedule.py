@@ -26,6 +26,12 @@ Passes
         host_sync() program splits at lowering time;
       - "none" places no edges (infinite slots).
     Always records the ResourcePool high-water mark in program meta.
+  * :func:`pack_puts` — materialized put aggregation (companion
+    triggered-ops paper, arXiv:2208.04817): dependency-free off-node
+    puts of an epoch sharing one rank permutation merge into ONE packed
+    multi-buffer descriptor — one staging pack, one collective, one
+    chained completion signal, one NIC injection. Runs before
+    throttling so the finite descriptor slots count PACKED descriptors.
   * :func:`node_aware_pass` — topology-aware put ordering: within each
     epoch's put run, off-node ("inter"-link) puts issue FIRST so their
     long latency and serialized NIC injection overlap the on-node puts
@@ -159,6 +165,123 @@ def throttle_pass(prog: TriggeredProgram, policy: str,
 
 
 # ---------------------------------------------------------------------------
+# put aggregation: packed multi-buffer descriptors
+# ---------------------------------------------------------------------------
+
+def _pack_run(run, windows, remap, groups_meta):
+    """Pack one epoch's put run: dependency-free off-node ("inter") puts
+    sharing the SAME rank permutation, parity, and source dtype merge
+    into ONE packed multi-buffer descriptor (the head keeps its op_id
+    and chained signal; the tails' op_ids are recorded in ``remap`` so
+    later dependency edges re-point at the head). Dependency-gated puts
+    are never merged and stay last in their original order (exactly the
+    :func:`_off_node_first` argument: their in-run edges are already
+    satisfied there), so two puts connected by a dependency edge never
+    collapse into one descriptor. On-node puts stay unpacked: the xGMI
+    fabric moves them in parallel, so serializing their bandwidth into
+    one message could only lose; aggregation is a NIC-descriptor
+    feature (paper §3 / arXiv:2208.04817)."""
+    in_run = {p.op_id for p in run}
+    free = [p for p in run if not any(d in in_run for d in p.deps)]
+    gated = [p for p in run if any(d in in_run for d in p.deps)]
+    groups: dict = {}
+    order = []
+    for p in free:
+        if p.link != "inter" or not p.perm:
+            key = ("solo", p.op_id)
+        else:
+            key = (p.phase % 2, p.perm, p.dtype)
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append(p)
+    packed = []
+    for key in order:
+        g = groups[key]
+        head = g[0]
+        if len(g) > 1:
+            head.srcs = tuple(p.src for p in g)
+            head.dsts = tuple(p.dst for p in g)
+            head.nbytes = sum(p.nbytes for p in g)
+            deps = []
+            for p in g:
+                deps.extend(p.deps)
+            head.deps = tuple(dict.fromkeys(deps))
+            win = windows.get(head.window)
+            staging = (win.pack_staging(head.epoch, head.phase, len(g))
+                       if win is not None else f"{head.window}.__pack")
+            head.label = f"packed_put{tuple(head.direction)}[{len(g)}]"
+            if head.chained is not None:
+                # ONE chained completion signal stands for the whole
+                # group: the packed payload is one message, one arrival
+                head.chained.label = (f"comp_packed"
+                                      f"{tuple(head.direction)}[{len(g)}]")
+            for p in g[1:]:
+                remap[p.op_id] = head.op_id
+            groups_meta.append({"head": head.op_id, "staging": staging,
+                                "members": [p.op_id for p in g],
+                                "nbytes": head.nbytes})
+        packed.append(head)
+    return packed + gated
+
+
+def pack_puts(prog: TriggeredProgram, pack: bool = True) -> TriggeredProgram:
+    """Materialized put aggregation (the companion triggered-ops paper's
+    aggregated descriptors, arXiv:2208.04817): rewrite each coalescible
+    group of an epoch — ring's K,V pair, a2a's partial+aux per shift,
+    same-permutation multi-face halo groups — into ONE packed TriggeredOp
+    that packs its payloads into one contiguous staging buffer, rides one
+    collective, and lands one chained completion signal for the whole
+    group. Runs BEFORE throttle_pass on purpose: the NIC's finite
+    triggered-op slots hold DESCRIPTORS, so packing directly reduces
+    descriptor pressure (fewer throttle edges), host dispatches
+    (run_host issues one dispatch per group), and emitted collectives
+    (run_compiled traces pack -> single ppermute -> unpack).
+
+    Wait nodes' ``expected_puts`` are recounted per descriptor and every
+    dependency edge naming a merged-away tail is re-pointed at its
+    group's head, so validate_deps and the simulator's completion-count
+    check keep holding on the packed program."""
+    prog.meta["pack"] = bool(pack)
+    if not pack:
+        return prog
+    out = []
+    remap: dict = {}
+    groups_meta: list = []
+    nodes = prog.nodes
+    i = 0
+    while i < len(nodes):
+        n = nodes[i]
+        if n.kind != "put":
+            out.append(n)
+            i += 1
+            continue
+        j = i
+        while (j < len(nodes) and nodes[j].kind == "put"
+               and nodes[j].window == n.window
+               and nodes[j].epoch == n.epoch):
+            j += 1
+        out.extend(_pack_run(nodes[i:j], prog.windows, remap, groups_meta))
+        i = j
+    if remap:
+        for n in out:
+            if n.deps:
+                n.deps = tuple(dict.fromkeys(
+                    remap.get(d, d) for d in n.deps))
+    prog.nodes = out
+    counts: dict = {}
+    for n in out:
+        if n.kind == "put":
+            k = (n.window, n.epoch)
+            counts[k] = counts.get(k, 0) + 1
+    for n in out:
+        if n.kind == "wait" and n.expected_puts >= 0:
+            n.expected_puts = counts.get((n.window, n.epoch), 0)
+    prog.meta["packed_groups"] = groups_meta
+    return prog
+
+
+# ---------------------------------------------------------------------------
 # node-aware ordering (off-node transfers first, optional aggregation)
 # ---------------------------------------------------------------------------
 
@@ -213,14 +336,20 @@ def node_aware_pass(prog: TriggeredProgram, node_aware: bool = True,
         i = j
     prog.nodes = out
     if coalesce:
+        # packed multi-buffer descriptors (pack_puts) are MATERIALIZED
+        # aggregation: each one is a real wire message that pays its
+        # alpha, so it must neither be marked aggregated (that would
+        # waive a real message's alpha — double-counting the discount
+        # packing replaces) nor anchor a marked group
         prev = None
         for n in prog.nodes:
-            if (n.kind == "put" and prev is not None
+            packed = n.kind == "put" and len(n.srcs) > 1
+            if (n.kind == "put" and not packed and prev is not None
                     and n.link == "inter" and prev.link == "inter"
                     and n.window == prev.window and n.epoch == prev.epoch
                     and n.node_deltas == prev.node_deltas):
                 n.aggregated = True
-            prev = n if n.kind == "put" else None
+            prev = n if n.kind == "put" and not packed else None
     return prog
 
 
@@ -242,7 +371,9 @@ def _accesses(n: TriggeredOp):
     if n.kind == "start":
         return {n.counter}, set()
     if n.kind == "put":
-        reads, writes = {n.src}, {n.dst}
+        # a packed multi-buffer descriptor reads/writes its WHOLE group
+        reads = set(n.srcs) if n.srcs else {n.src}
+        writes = set(n.dsts) if n.dsts else {n.dst}
         if n.chained is not None:
             reads.add(n.chained.counter)
             writes.add(n.chained.counter)
@@ -352,15 +483,21 @@ def schedule(prog: TriggeredProgram, *, throttle: str = "adaptive",
              resources: int = 64, merged: bool = True,
              ordered: bool = False, nstreams: int = 1,
              node_aware: bool = False,
-             coalesce: bool = False) -> TriggeredProgram:
+             coalesce: bool = False,
+             pack: bool = False) -> TriggeredProgram:
     """Apply all schedule passes; returns the same (mutated) program.
 
-    ``node_aware`` runs after throttling (it must respect every
-    dependency edge the earlier passes placed) and before stream
-    assignment (the cross-stream conflict edges are derived from the
-    final emission order)."""
+    ``pack`` runs after the ordering pass (P2P chains gate every put, so
+    an ordered program packs nothing — aggregation and message-matching
+    semantics are mutually exclusive by construction) and BEFORE
+    throttling, because the finite triggered-op slots hold descriptors:
+    a packed group consumes one. ``node_aware`` runs after throttling
+    (it must respect every dependency edge the earlier passes placed)
+    and before stream assignment (the cross-stream conflict edges are
+    derived from the final emission order)."""
     prog = fuse_signals(prog, merged)
     prog = ordering_pass(prog, ordered)
+    prog = pack_puts(prog, pack)
     prog = throttle_pass(prog, throttle, resources)
     prog = node_aware_pass(prog, node_aware, coalesce)
     prog = assign_streams(prog, nstreams)

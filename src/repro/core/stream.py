@@ -215,21 +215,23 @@ class STStream:
                            resources: int = 64, merged: bool = True,
                            ordered: bool = False, nstreams: int = 1,
                            node_aware: bool = False,
-                           coalesce: bool = False) -> List[TriggeredProgram]:
+                           coalesce: bool = False,
+                           pack: bool = False) -> List[TriggeredProgram]:
         """Lower the op queue and run the schedule passes; one scheduled
         descriptor DAG per host_sync-delimited segment. Cached per
         (queue, options) so repeated synchronize calls reuse programs
         (and therefore compiled executables)."""
         key = (tuple(op.cache_key() for op in self.program),
                throttle, resources, merged, ordered, nstreams,
-               node_aware, coalesce)
+               node_aware, coalesce, pack)
         progs = self._sched_cache.get(key)
         if progs is None:
             progs = [
                 schedule(lower_segment(self, seg), throttle=throttle,
                          resources=resources, merged=merged,
                          ordered=ordered, nstreams=nstreams,
-                         node_aware=node_aware, coalesce=coalesce)
+                         node_aware=node_aware, coalesce=coalesce,
+                         pack=pack)
                 for seg in split_segments(self.program)]
             self._sched_cache[key] = progs
         return progs
@@ -239,11 +241,13 @@ class STStream:
                     resources: int = 64, merged: bool = True,
                     donate: bool = True, ordered: bool = False,
                     nstreams: int = 1, node_aware: bool = False,
-                    coalesce: bool = False):
+                    coalesce: bool = False, pack: bool = False):
         """Execute the enqueued program; returns the new state.
 
         mode="st": one compiled program, single host sync (this call).
         mode="host": per-descriptor dispatch, blocking at epoch boundaries.
+        ``pack`` materializes off-node aggregation groups as packed
+        multi-buffer put descriptors (schedule.pack_puts).
         """
         if self.mesh is None:
             raise ValueError("cannot execute a device-free stream "
@@ -251,7 +255,7 @@ class STStream:
         for prog in self.scheduled_programs(
                 throttle=throttle, resources=resources, merged=merged,
                 ordered=ordered, nstreams=nstreams, node_aware=node_aware,
-                coalesce=coalesce):
+                coalesce=coalesce, pack=pack):
             if mode == "st":
                 state = backends.run_compiled(self, prog, state,
                                               donate=donate)

@@ -29,6 +29,16 @@ term, so a burst of off-node puts drains one after another — the lever
 pass marked ``aggregated`` (coalesced same-target-node group tail)
 rides the group head's message and pays no per-message alpha.
 
+A PACKED multi-buffer descriptor (``schedule.pack_puts`` materialized a
+whole aggregation group into one node) is priced as exactly one
+descriptor: one host dispatch, one ``t_issue`` dequeue on the issuing
+stream, one per-message alpha, the SUMMED beta of its payloads (one
+contiguous staging buffer on the wire), one NIC injection slot, and one
+chained completion — versus N of each for the unpacked group. For
+off-node groups the packed cost is therefore <= the unpacked cost at
+every size (N-1 saved alphas, issues, and dispatches; the betas sum
+either way because the NIC serializes injections).
+
 Timeline model: the host enqueues every descriptor (t_dispatch each);
 each device STREAM executes its kernels/signals/waits in program order
 on its own timeline (``t_dev[stream]`` — single-stream programs have
@@ -131,6 +141,12 @@ def simulate_program(prog: TriggeredProgram, cm: CostModel = None,
             t_dev[s] = start + (cm.t_signal if node.fused
                                 else cm.t_launch + cm.t_signal)
         elif node.kind == "put":
+            if node.srcs and len(node.srcs) != len(node.dsts):
+                raise ValueError(
+                    f"simulate_program: packed put "
+                    f"{node.label or node.op_id} carries {len(node.srcs)} "
+                    f"source(s) but {len(node.dsts)} destination(s) — a "
+                    "packed descriptor's buffer lists must pair up")
             alpha, beta = cm.link_cost(node.link or "intra")
             xfer = beta * node.nbytes / 1024.0
             if node.link == "inter":

@@ -73,6 +73,19 @@ class TriggeredOp:
     dst: Optional[str] = None
     direction: Any = None
     nbytes: int = 0
+    srcs: Tuple[str, ...] = ()      # packed multi-buffer descriptor
+    #                                 (schedule.pack_puts): ALL source
+    #                                 buffers riding this one put; empty
+    #                                 for a plain single-buffer put
+    dsts: Tuple[str, ...] = ()      # matching destination buffers
+    dtype: str = ""                 # numpy dtype name of the put's source
+    #                                 buffer (from lowering): packed
+    #                                 members must agree so the staging
+    #                                 concat is a pure byte reshuffle
+    perm: Tuple = ()                # the put's full (src, dst) linear-rank
+    #                                 permutation from lowering — the
+    #                                 EXACT identity pack_puts groups by:
+    #                                 equal perms ride one collective
     link: str = "intra"             # physical link class of a put: "intra"
     #                                 (on-node xGMI) or "inter" (off-node
     #                                 through the NIC) — from the window
@@ -124,6 +137,7 @@ class TriggeredOp:
                    if self.chained is not None else None)
         return (self.kind, self.window, self.label, self.fn_token,
                 self.reads, self.writes, self.src, self.dst,
+                self.srcs, self.dsts,
                 tuple(self.direction) if self.direction else None,
                 self.role, self.slot, tuple(self.slots), self.fused,
                 self.wire, self.counter, deps, chained,
@@ -143,6 +157,11 @@ class TriggeredProgram:
 
     def puts(self) -> List[TriggeredOp]:
         return [n for n in self.nodes if n.kind == "put"]
+
+    def packed_puts(self) -> List[TriggeredOp]:
+        """Puts that are packed multi-buffer descriptors
+        (schedule.pack_puts materialized an aggregation group)."""
+        return [n for n in self.puts() if len(n.srcs) > 1]
 
     def epochs(self) -> int:
         return sum(1 for n in self.nodes if n.kind == "complete")
@@ -193,9 +212,15 @@ class TriggeredProgram:
         epochs = max(self.epochs(), 1)
         signals = sum(1 for n in self.nodes if n.kind == "signal")
         signals += sum(1 for n in puts if n.chained is not None)
+        packed = self.packed_puts()
         return {
             "descriptors": len(self.nodes),
             "puts": len(puts),
+            # a packed descriptor carries several buffers on one wire
+            # message: put_buffers is what the UNPACKED schedule would
+            # have issued, puts is what this schedule actually issues
+            "packed_puts": len(packed),
+            "put_buffers": sum(max(len(p.srcs), 1) for p in puts),
             "epochs": self.epochs(),
             "puts_per_epoch": len(puts) / epochs,
             "bytes_per_epoch": sum(p.nbytes for p in puts) / epochs,
@@ -214,6 +239,7 @@ class TriggeredProgram:
             "nstreams": self.meta.get("nstreams", 1),
             "double_buffer": self.meta.get("double_buffer", False),
             "node_aware": self.meta.get("node_aware", False),
+            "pack": self.meta.get("pack", False),
         }
 
 

@@ -28,6 +28,12 @@ from typing import Dict, Sequence, Tuple
 import jax.numpy as jnp
 
 PONG = "__pp"       # state-key suffix of the pong (odd-parity) buffer set
+PACK = "__pack"     # staging-buffer label prefix of a packed multi-buffer
+#                     put descriptor (schedule.pack_puts): the contiguous
+#                     buffer the group's payloads are packed into before
+#                     riding one collective. The staging buffer is a
+#                     TRACE-TIME value materialized by the executors (the
+#                     concat before the ppermute), never allocated state.
 
 
 def is_counter_name(key: str) -> bool:
@@ -91,6 +97,16 @@ class STWindow:
         if bname.endswith(PONG):
             return bname[:-len(PONG)]
         return bname
+
+    def spec_of(self, bname: str):
+        """(local_shape, dtype) of a buffer base name, pong keys resolving
+        to their ping buffer's spec; None when the window doesn't own it."""
+        return self.buffers.get(self.base_buffer(bname))
+
+    def pack_staging(self, epoch: int, phase: int, nbuffers: int) -> str:
+        """Label of the staging buffer a packed put descriptor packs its
+        ``nbuffers`` payloads into (one per (epoch, parity) group)."""
+        return f"{self.name}.{PACK}{epoch}p{phase % 2}x{nbuffers}"
 
     def allocate(self, num_ranks: int) -> Dict[str, jnp.ndarray]:
         """Materialize global buffers: (num_ranks, *local_shape)."""

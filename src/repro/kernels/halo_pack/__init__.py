@@ -1,3 +1,4 @@
 from repro.kernels.halo_pack.ops import halo_pack, halo_unpack
+from repro.kernels.halo_pack.ref import pack_flat, unpack_flat
 
-__all__ = ["halo_pack", "halo_unpack"]
+__all__ = ["halo_pack", "halo_unpack", "pack_flat", "unpack_flat"]

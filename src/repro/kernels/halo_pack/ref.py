@@ -1,10 +1,33 @@
 """Pure-jnp oracle for the merged halo pack/unpack (= core.halo functions
-restricted to one rank's local block)."""
+restricted to one rank's local block), plus the GENERIC flat pack/unpack
+pair the executors use to materialize packed multi-buffer put
+descriptors (schedule.pack_puts): N same-dtype buffers flatten and
+concatenate into one contiguous staging buffer before the collective,
+and split back into their destination shapes after it — a pure byte
+reshuffle, so a packed schedule stays bit-identical to the unpacked
+one."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.core.halo import (DIRECTIONS, offsets_of, surface_slices)
+
+
+def pack_flat(parts):
+    """Pack N same-dtype buffers (each (R, *local)) into one contiguous
+    (R, total) staging buffer — the origin side of a packed put."""
+    return jnp.concatenate([p.reshape(p.shape[0], -1) for p in parts],
+                           axis=1)
+
+
+def unpack_flat(flat, like):
+    """Split a (R, total) staging buffer back into buffers shaped like
+    the templates in ``like`` — the target side of a packed put."""
+    sizes, out, o = [int(t.size // t.shape[0]) for t in like], [], 0
+    for tmpl, s in zip(like, sizes):
+        out.append(flat[:, o:o + s].reshape(tmpl.shape))
+        o += s
+    return out
 
 
 def halo_pack_ref(field, n):

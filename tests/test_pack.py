@@ -1,0 +1,412 @@
+"""Materialized put aggregation (schedule.pack_puts):
+
+  * group materialization: ring's K,V pair and a2a's partial+aux per
+    shift become ONE packed multi-buffer descriptor (srcs/dsts tuples,
+    summed nbytes, one chained completion signal); faces on a size-2
+    periodic grid packs its same-permutation multi-face groups,
+  * on-node ("intra") puts and single-node topologies never pack (the
+    xGMI fabric moves them in parallel; aggregation is a NIC-descriptor
+    feature), so the pass is the identity there,
+  * wait nodes' expected_puts are recounted per DESCRIPTOR and every
+    dependency edge naming a merged-away tail re-points at its group's
+    head — the simulator's completion-count check and validate_deps
+    hold on every packed program,
+  * pass ordering: pack runs before throttling (finite descriptor
+    slots hold packed descriptors) and composes with node_aware /
+    assign_streams / double_buffer,
+  * property tests (hypothesis, degrading to the example-based shim):
+    pack_puts never merges across dependency edges (P2P-ordered
+    programs pack nothing; gated puts stay individual) and never
+    across stream or epoch boundaries,
+  * derived cost: packed <= unpacked (coalesce=False baseline) at
+    every size/policy/stream configuration,
+  * executor equivalence: the packed schedule stays bit-identical to
+    the unpacked schedule through run_compiled AND run_host for
+    faces/ring/a2a (multi-device, in a subprocess).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # degrade to example-based sweeps
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import (CostModel, pack_puts, pattern_programs,
+                        simulate_pattern, simulate_program)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SIZE_KW = {"faces": dict(n=(4, 4, 4))}
+GRID = {"faces": (2, 2, 2), "ring": (4,), "a2a": (4,)}
+RPN = {"faces": 4, "ring": 2, "a2a": 2}       # two hardware nodes each
+
+
+def _prog(pat, niter=2, **kw):
+    kw = dict(SIZE_KW.get(pat, {}), grid=GRID[pat], **kw)
+    progs = pattern_programs(pat, niter, **kw)
+    assert len(progs) == 1
+    return progs[0]
+
+
+# ---------------------------------------------------------------------------
+# group materialization
+# ---------------------------------------------------------------------------
+
+def test_ring_kv_pair_packs_to_one_descriptor():
+    prog = _prog("ring", throttle="none", ranks_per_node=RPN["ring"],
+                 pack=True)
+    by_epoch = {}
+    for p in prog.puts():
+        by_epoch.setdefault(p.epoch, []).append(p)
+    assert by_epoch
+    for puts in by_epoch.values():
+        assert len(puts) == 1
+        (p,) = puts
+        assert p.srcs == ("ring.k", "ring.v")
+        assert p.dsts == ("ring.recvk", "ring.recvv")
+        assert p.label.startswith("packed_put")
+        assert p.chained is not None
+
+
+def test_a2a_partial_aux_pack_per_shift():
+    n = GRID["a2a"][0]
+    prog = _prog("a2a", throttle="none", ranks_per_node=RPN["a2a"],
+                 pack=True)
+    by_epoch = {}
+    for p in prog.puts():
+        by_epoch.setdefault(p.epoch, []).append(p)
+    for puts in by_epoch.values():
+        assert len(puts) == n - 1          # one packed put per shift
+        for k, p in enumerate(puts, start=1):
+            assert p.srcs == ("a2a.partial", "a2a.paux")
+            assert p.dsts == (f"a2a.recvp{k}", f"a2a.recva{k}")
+
+
+def test_faces_multi_face_groups_pack_by_permutation():
+    """(2,2,2) grid, 4 ranks/node: the 18 off-node surface puts share 4
+    distinct rank permutations (on a size-2 periodic axis +1 and -1 are
+    the same shift), so they ride 4 packed descriptors; the 8 on-node
+    puts stay individual."""
+    prog = _prog("faces", throttle="none", ranks_per_node=RPN["faces"],
+                 pack=True)
+    epoch0 = [p for p in prog.puts() if p.epoch == 0]
+    packed = [p for p in epoch0 if len(p.srcs) > 1]
+    singles = [p for p in epoch0 if len(p.srcs) <= 1]
+    assert len(packed) == 4
+    assert sorted(len(p.srcs) for p in packed) == [2, 4, 4, 8]
+    assert len(singles) == 8
+    assert all(p.link == "intra" for p in singles)
+    # every member of a packed group shares ONE permutation
+    for p in packed:
+        assert p.link == "inter" and p.perm
+        assert p.nbytes > 0
+
+
+def test_packed_nbytes_is_group_sum():
+    packed = _prog("ring", throttle="none", ranks_per_node=RPN["ring"],
+                   pack=True)
+    unpacked = _prog("ring", throttle="none", ranks_per_node=RPN["ring"])
+    per_epoch = sum(p.nbytes for p in unpacked.puts()
+                    if p.epoch == 0)
+    assert packed.puts()[0].nbytes == per_epoch
+
+
+def test_pack_identity_without_node_mapping_or_on_intra():
+    """Single-node topologies (and intra-only links) never pack."""
+    for pat in ("faces", "ring", "a2a"):
+        prog = _prog(pat, throttle="none", pack=True)
+        assert prog.meta["pack"] is True
+        assert not prog.packed_puts()
+        base = _prog(pat, throttle="none")
+        assert [n.kind for n in prog.nodes] == [n.kind for n in base.nodes]
+
+
+def test_pack_disabled_is_identity():
+    prog = _prog("ring", throttle="none", ranks_per_node=RPN["ring"])
+    assert prog.meta["pack"] is False
+    assert not prog.packed_puts()
+
+
+def test_stats_report_packed_counts():
+    prog = _prog("ring", throttle="none", ranks_per_node=RPN["ring"],
+                 pack=True)
+    s = prog.stats()
+    assert s["pack"] is True
+    assert s["puts_per_epoch"] == 1.0
+    assert s["packed_puts"] == len(prog.packed_puts()) > 0
+    # put_buffers preserves what the unpacked schedule would issue
+    base = _prog("ring", throttle="none", ranks_per_node=RPN["ring"])
+    assert s["put_buffers"] == base.stats()["puts"]
+
+
+# ---------------------------------------------------------------------------
+# wait counts, dependency remapping, and validation
+# ---------------------------------------------------------------------------
+
+def test_wait_expected_puts_recounted_per_descriptor():
+    prog = _prog("ring", throttle="none", ranks_per_node=RPN["ring"],
+                 pack=True)
+    waits = [n for n in prog.nodes if n.kind == "wait"]
+    assert waits and all(w.expected_puts == 1 for w in waits)
+    # and the simulator's completion-count check passes on the packed DAG
+    assert simulate_program(prog, CostModel()) > 0
+
+
+def test_dependency_edges_remap_to_group_heads():
+    """Adaptive throttling on the packed program: every dep edge names a
+    live op (validate_deps ran inside schedule), and edges that would
+    have named a merged tail point at its head instead."""
+    prog = _prog("a2a", niter=4, throttle="adaptive", resources=2,
+                 ranks_per_node=RPN["a2a"], pack=True)
+    known = {n.op_id for n in prog.nodes}
+    put_deps = [d for p in prog.puts() for d in p.deps]
+    assert put_deps, "adaptive R=2 must place throttle edges"
+    assert all(d in known for d in put_deps)
+    assert simulate_program(prog, CostModel()) > 0
+
+
+def test_packed_program_simulates_with_streams_and_double_buffer():
+    for pat in ("faces", "ring", "a2a"):
+        kw = dict(SIZE_KW.get(pat, {}))
+        packed = simulate_pattern(pat, 3, policy="adaptive", resources=8,
+                                  grid=GRID[pat], ranks_per_node=RPN[pat],
+                                  nstreams=2, double_buffer=True,
+                                  pack=True, **kw)
+        unpacked = simulate_pattern(pat, 3, policy="adaptive", resources=8,
+                                    grid=GRID[pat],
+                                    ranks_per_node=RPN[pat],
+                                    nstreams=2, double_buffer=True, **kw)
+        assert 0 < packed <= unpacked + 1e-9, (pat, packed, unpacked)
+
+
+def test_coalesce_never_marks_packed_descriptors():
+    """pack + coalesce compose without double-counting: a packed
+    descriptor is a real wire message that pays its alpha, so the
+    coalesce marking must skip it (marked aggregation is the waiver
+    packing REPLACES) — and the combined derived cost therefore matches
+    pack alone when every off-node put packed."""
+    for pat in ("faces", "ring", "a2a"):
+        kw = dict(SIZE_KW.get(pat, {}))
+        prog = _prog(pat, throttle="none", ranks_per_node=RPN[pat],
+                     node_aware=True, coalesce=True, pack=True)
+        assert prog.packed_puts()
+        assert all(not p.aggregated for p in prog.packed_puts())
+        both = simulate_pattern(pat, 2, policy="none", grid=GRID[pat],
+                                ranks_per_node=RPN[pat], node_aware=True,
+                                coalesce=True, pack=True, **kw)
+        pack_only = simulate_pattern(pat, 2, policy="none", grid=GRID[pat],
+                                     ranks_per_node=RPN[pat],
+                                     node_aware=True, pack=True, **kw)
+        assert abs(both - pack_only) < 1e-9, (pat, both, pack_only)
+
+
+def test_packed_descriptor_with_mismatched_buffers_raises():
+    prog = _prog("ring", throttle="none", ranks_per_node=RPN["ring"],
+                 pack=True)
+    prog.packed_puts()[0].dsts = ("ring.recvk",)
+    with pytest.raises(ValueError, match="packed"):
+        simulate_program(prog, CostModel())
+
+
+# ---------------------------------------------------------------------------
+# derived cost: packed <= unpacked everywhere
+# ---------------------------------------------------------------------------
+
+def test_packed_never_costlier_across_patterns_sizes_policies():
+    sizes = {"faces": [dict(n=(b,) * 3) for b in (2, 4, 8)],
+             "ring": [dict(seq_per_rank=b) for b in (8, 32, 128)],
+             "a2a": [dict(seq=b) for b in (8, 32, 128)]}
+    for pat, kws in sizes.items():
+        for kw in kws:
+            for policy, res in (("adaptive", 8), ("static", 8),
+                                ("none", 8)):
+                for na in (False, True):
+                    unpacked = simulate_pattern(
+                        pat, 3, policy=policy, resources=res,
+                        grid=GRID[pat], ranks_per_node=RPN[pat],
+                        node_aware=na, **kw)
+                    packed = simulate_pattern(
+                        pat, 3, policy=policy, resources=res,
+                        grid=GRID[pat], ranks_per_node=RPN[pat],
+                        node_aware=na, pack=True, **kw)
+                    assert packed <= unpacked + 1e-9, \
+                        (pat, kw, policy, na, packed, unpacked)
+
+
+def test_throttle_pressure_drops_with_packing():
+    """The finite descriptor slots hold PACKED descriptors: the resource
+    high-water mark of the packed schedule never exceeds the unpacked
+    one (pack runs before throttle_pass on purpose)."""
+    for pat in ("faces", "ring", "a2a"):
+        packed = _prog(pat, niter=3, throttle="adaptive", resources=8,
+                       ranks_per_node=RPN[pat], pack=True)
+        unpacked = _prog(pat, niter=3, throttle="adaptive", resources=8,
+                         ranks_per_node=RPN[pat])
+        assert packed.meta["resource_high_water"] \
+            <= unpacked.meta["resource_high_water"]
+
+
+# ---------------------------------------------------------------------------
+# property tests (degrade to example sweeps without hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(niter=st.integers(1, 3), gate=st.integers(0, 7),
+       pat=st.sampled_from(["faces", "ring", "a2a"]))
+def test_pack_never_merges_across_dependency_edges(niter, gate, pat):
+    """Hand-gate a dependency edge between two would-be group members of
+    a freshly lowered program: the gated put must survive as its own
+    descriptor (never merged into — or under — the put it depends on),
+    whichever pair the edge lands on."""
+    from repro.core import STStream, get_pattern, lower_segment, \
+        split_segments
+
+    p_def = get_pattern(pat)
+    stream = STStream(None, p_def.grid_axes, grid_shape=GRID[pat])
+    p_def.build(stream, niter, merged=True, ranks_per_node=RPN[pat],
+                **SIZE_KW.get(pat, {}))
+    prog = lower_segment(stream, split_segments(stream.program)[0])
+    inter = [p for p in prog.puts() if p.epoch == 0 and p.link == "inter"]
+    pairs = [(a, b) for i, a in enumerate(inter) for b in inter[i + 1:]
+             if a.perm == b.perm]
+    assert pairs, (pat, "no packable pair to gate")
+    a, b = pairs[gate % len(pairs)]
+    b.deps += (a.op_id,)
+    pack_puts(prog, True)
+    live = {n.op_id: n for n in prog.nodes}
+    assert b.op_id in live                    # the gated put survived
+    assert len(live[b.op_id].srcs) <= 1       # ...unmerged
+    merged_away = {m for g in prog.meta["packed_groups"]
+                   for m in g["members"][1:]}
+    assert b.op_id not in merged_away
+    # group bookkeeping: heads live, tails gone, counts consistent
+    for g in prog.meta["packed_groups"]:
+        assert g["head"] == g["members"][0] and g["head"] in live
+        assert not set(g["members"][1:]) & set(live)
+
+
+@settings(max_examples=8, deadline=None)
+@given(niter=st.integers(1, 3), res=st.integers(2, 16),
+       pat=st.sampled_from(["faces", "ring", "a2a"]))
+def test_ordered_programs_pack_nothing(niter, res, pat):
+    """P2P message-matching chains every put on its predecessor — those
+    dependency edges gate every put but the first of each epoch, so an
+    ordered program must keep its puts individual."""
+    prog = _prog(pat, niter=niter, throttle="adaptive", resources=res,
+                 ordered=True, ranks_per_node=RPN[pat], pack=True)
+    assert not prog.packed_puts()
+    puts = prog.puts()
+    for prev, cur in zip(puts, puts[1:]):
+        assert prev.op_id in cur.deps
+
+
+@settings(max_examples=8, deadline=None)
+@given(niter=st.integers(1, 4), nstreams=st.integers(2, 4),
+       pat=st.sampled_from(["faces", "ring", "a2a"]))
+def test_pack_never_merges_across_stream_or_epoch_boundaries(
+        niter, nstreams, pat):
+    """Every packed descriptor's group lived in ONE epoch (and therefore
+    lands on one stream after assign_streams): members of a group share
+    the head's window, epoch, phase, and stream."""
+    prog = _prog(pat, niter=niter, throttle="adaptive", resources=8,
+                 ranks_per_node=RPN[pat], pack=True, nstreams=nstreams,
+                 double_buffer=True)
+    by_epoch = {}
+    for p in prog.puts():
+        by_epoch.setdefault((p.window, p.epoch), []).append(p)
+    for (win, _e), puts in by_epoch.items():
+        streams = {p.stream for p in puts}
+        assert len(streams) == 1
+    for p in prog.packed_puts():
+        # a packed put's buffers all resolve inside its own window
+        assert all(s.startswith(p.window + ".") for s in p.srcs)
+        assert all(d.startswith(p.window + ".") for d in p.dsts)
+
+
+def test_pack_pass_direct_invocation_matches_schedule():
+    """pack_puts is usable standalone on a freshly lowered program (the
+    driver wiring isn't load-bearing)."""
+    prog = _prog("ring", throttle="none", ranks_per_node=RPN["ring"])
+    assert not prog.packed_puts()
+    out = pack_puts(prog, True)
+    assert out is prog and prog.packed_puts()
+    assert prog.meta["pack"] is True
+
+
+# ---------------------------------------------------------------------------
+# executor equivalence: the packed schedule is bit-identical through
+# run_compiled AND run_host for faces / ring / a2a
+# ---------------------------------------------------------------------------
+
+EQUIV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    from repro.core import STStream, get_pattern
+    from repro.launch.mesh import make_mesh
+
+    CASES = [
+        ("faces", (2, 2, 2), ("x", "y", "z"), 4,
+         dict(n=(3, 3, 3)), ["acc", "res", "src", "it"], ["src"]),
+        ("ring", (4,), ("data",), 2,
+         dict(batch=1, seq_per_rank=4, heads=2, head_dim=8), ["out"],
+         ["q", "k", "v"]),
+        ("a2a", (4,), ("model",), 2,
+         dict(batch=1, seq=8, d_model=16, expert_ff=16, experts=8,
+              top_k=2), ["out", "aux"],
+         ["x", "router", "wg", "wu", "wd"]),
+    ]
+    niter = 2
+    for pat_name, grid, axes, rpn, kw, outputs, seeds in CASES:
+        pat = get_pattern(pat_name)
+        mesh = make_mesh(grid, axes)
+
+        def run(mode, pack):
+            stream = STStream(mesh, axes)
+            win, _ = pat.build(stream, niter, merged=True,
+                               ranks_per_node=rpn, **kw)
+            state = stream.allocate()
+            rng = np.random.RandomState(0)
+            for b in seeds:
+                k = win.qual(b)
+                val = rng.rand(*state[k].shape).astype(
+                    np.asarray(state[k]).dtype) * 0.3
+                state[k] = jax.device_put(val, state[k].sharding)
+            state = stream.synchronize(state, mode=mode,
+                                       throttle="adaptive", resources=8,
+                                       donate=False, node_aware=True,
+                                       pack=pack)
+            if pack:
+                progs = stream.scheduled_programs(
+                    throttle="adaptive", resources=8, node_aware=True,
+                    pack=True)
+                assert progs[0].packed_puts(), (pat_name, "no packing")
+            return {b: np.asarray(state[win.qual(b)]) for b in outputs}
+
+        for mode in ("st", "host"):
+            ref = run(mode, False)
+            got = run(mode, True)
+            for b in outputs:
+                assert (got[b] == ref[b]).all(), \\
+                    (pat_name, mode, b, np.abs(got[b] - ref[b]).max())
+                assert np.asarray(got[b]).any(), (pat_name, b, "vacuous")
+            print(f"OK {pat_name}_{mode}")
+""")
+
+
+@pytest.mark.slow
+def test_packed_bit_identical_all_patterns_both_executors():
+    """Acceptance: with pack_puts enabled, run_compiled and run_host
+    produce outputs bit-identical to the unpacked schedule for every
+    pattern — a packed descriptor's pack -> single collective -> unpack
+    is a pure byte reshuffle over the same rank permutation."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run([sys.executable, "-c", EQUIV_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert r.stdout.count("OK") == 6
