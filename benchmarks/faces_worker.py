@@ -1,8 +1,8 @@
 """ST benchmark worker (runs in its own process so it can claim fake
 devices). Originally Faces-only, now pattern-agnostic: ``--pattern``
-selects any registered ST program builder (faces / ring / a2a) and the
-whole worker body — build, schedule, execute, simulate, stats — is
-shared. Prints one CSV line: name,us_per_call,derived — plus a "#stats"
+selects any registered ST program builder (faces / ring / a2a /
+broadcast) and the whole worker body — build, schedule, execute,
+simulate, stats — is shared. Prints one CSV line: name,us_per_call,derived — plus a "#stats"
 comment line with the scheduled program's descriptor counts.
 
   us_per_call — measured wall-clock per inner-loop iteration on this
@@ -25,11 +25,14 @@ import sys
 
 # per-pattern pattern-output and seedable-input buffer names, shared by
 # every bit-identity verification path (--verify_overlap /
-# --verify_node_aware / --verify_pack)
+# --verify_node_aware / --verify_pack / --verify_chunk /
+# --verify_multicast)
 VERIFY_OUTPUTS = {"faces": ["acc", "res", "src", "it"],
-                  "ring": ["out"], "a2a": ["out", "aux"]}
+                  "ring": ["out"], "a2a": ["out", "aux"],
+                  "broadcast": ["ctile", "it"]}
 VERIFY_INPUTS = {"faces": ["src"], "ring": ["q", "k", "v"],
-                 "a2a": ["x", "router", "wg", "wu", "wd"]}
+                 "a2a": ["x", "router", "wg", "wu", "wd"],
+                 "broadcast": ["abase", "b"]}
 
 
 def seeded_state(stream, win, pattern, seed):
@@ -78,6 +81,8 @@ def build_kwargs(args, ndev):
     if args.pattern == "a2a":
         return dict(batch=1, seq=args.block, d_model=16, expert_ff=16,
                     experts=2 * ndev, top_k=2)
+    if args.pattern == "broadcast":
+        return dict(tile=args.block, multicast=bool(args.multicast))
     raise ValueError(f"no size mapping for pattern {args.pattern!r}")
 
 
@@ -88,7 +93,7 @@ def main():
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--pattern", default="faces",
-                    choices=["faces", "ring", "a2a"])
+                    choices=["faces", "ring", "a2a", "broadcast"])
     ap.add_argument("--grid", default="2,2,2",
                     help="process grid, e.g. 2,2,2 (faces) or 4 (ring/a2a)")
     ap.add_argument("--block", type=int, default=8,
@@ -130,6 +135,18 @@ def main():
     ap.add_argument("--verify_pack", type=int, default=0,
                     help="also run the unpacked schedule and require "
                          "bit-identical pattern outputs")
+    ap.add_argument("--chunk_bytes", type=int, default=0,
+                    help="split larger off-node puts into pipelined "
+                         "chunk chains (schedule.chunk_puts; 0 = off)")
+    ap.add_argument("--verify_chunk", type=int, default=0,
+                    help="also run the monolithic (unchunked) schedule "
+                         "and require bit-identical pattern outputs")
+    ap.add_argument("--multicast", type=int, default=0,
+                    help="broadcast pattern: one multicast put "
+                         "descriptor instead of the unicast fanout")
+    ap.add_argument("--verify_multicast", type=int, default=0,
+                    help="also run the unicast-fanout program and "
+                         "require bit-identical pattern outputs")
     ap.add_argument("--name", default=None)
     ap.add_argument("--json-dir", default=None,
                     help="also write a {name}.json record (descriptor "
@@ -181,7 +198,8 @@ def main():
     sched_opts = dict(throttle=throttle, resources=args.resources,
                       merged=merged, ordered=bool(args.ordered),
                       nstreams=nstreams, node_aware=bool(args.node_aware),
-                      coalesce=bool(args.coalesce), pack=bool(args.pack))
+                      coalesce=bool(args.coalesce), pack=bool(args.pack),
+                      chunk_bytes=args.chunk_bytes)
 
     def run_once(st):
         return stream.synchronize(st, mode=args.mode, donate=False,
@@ -265,6 +283,54 @@ def main():
               f"ranks_per_node={args.ranks_per_node} "
               f"outputs={VERIFY_OUTPUTS[args.pattern]}")
 
+    if args.verify_chunk:
+        # the chunked schedule (pipelined chunk chains) must not change
+        # a single output bit vs the monolithic schedule — the union of
+        # a chain's chunks covers every destination element exactly once
+        if not args.chunk_bytes:
+            sys.exit("--verify_chunk without --chunk_bytes compares the "
+                     "monolithic schedule against itself")
+        got_state = stream.synchronize(
+            seeded_state(stream, win, args.pattern, 2), mode=args.mode,
+            donate=False, **sched_opts)
+        ref_state = stream.synchronize(
+            seeded_state(stream, win, args.pattern, 2), mode=args.mode,
+            donate=False, **dict(sched_opts, chunk_bytes=0))
+        verify_outputs(args.pattern, "chunked", got_state, win,
+                       ref_state, win)
+        if not any(prog.chunked_puts() for prog in progs):
+            sys.exit("chunk verification is vacuous: the chunked "
+                     "schedule contains no chunk chain")
+        print(f"# chunk-verified {args.pattern} "
+              f"chunk_bytes={args.chunk_bytes} "
+              f"outputs={VERIFY_OUTPUTS[args.pattern]}")
+
+    if args.verify_multicast:
+        # the multicast program (one descriptor, one completion tree)
+        # must not change a single output bit vs the unicast fanout —
+        # both deliver identical bytes into the same landing buffers
+        if args.pattern != "broadcast" or not args.multicast:
+            sys.exit("--verify_multicast needs --pattern broadcast "
+                     "--multicast 1")
+        got_state = stream.synchronize(
+            seeded_state(stream, win, args.pattern, 3), mode=args.mode,
+            donate=False, **sched_opts)
+        ref_stream = STStream(mesh, pat.grid_axes)
+        ref_win, _ = pat.build(
+            ref_stream, args.niter, merged=bool(args.merged),
+            double_buffer=double_buffer, ranks_per_node=ranks_per_node,
+            **dict(build_kwargs(args, ndev), multicast=False))
+        ref_state = ref_stream.synchronize(
+            seeded_state(ref_stream, ref_win, args.pattern, 3),
+            mode=args.mode, donate=False, **sched_opts)
+        verify_outputs(args.pattern, "multicast", got_state, win,
+                       ref_state, ref_win)
+        if not any(prog.multicast_puts() for prog in progs):
+            sys.exit("multicast verification is vacuous: the program "
+                     "contains no multicast descriptor")
+        print(f"# multicast-verified {args.pattern} "
+              f"outputs={VERIFY_OUTPUTS[args.pattern]}")
+
     stats = progs[0].stats()
     stats["segments"] = len(progs)
     name = args.name or (f"{args.pattern}_{args.mode}_{throttle}"
@@ -273,6 +339,8 @@ def main():
     print(f"#stats {name} pattern={stats['pattern']} "
           f"puts_per_epoch={stats['puts_per_epoch']:.0f} "
           f"packed_puts={stats['packed_puts']} "
+          f"chunked_puts={stats['chunked_puts']} "
+          f"multicast_puts={stats['multicast_puts']} "
           f"inter_puts={stats['inter_puts']} "
           f"resource_high_water={stats['resource_high_water']} "
           f"critical_path_depth={stats['critical_path_depth']} "

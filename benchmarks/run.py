@@ -25,24 +25,36 @@ Sections:
          (schedule.pack_puts) vs the unpacked schedule over the same
          sweep grid, plus one executor worker per pattern verifying the
          packed schedule bit-identical in-process
+  chunk  chunked-pipelined transport (schedule.chunk_puts): chunked vs
+         monolithic derived latency at large-message off-node points,
+         plus executor workers verifying the chunked schedule
+         bit-identical in-process
+  broadcast  SUMMA-style row fanout: ONE multicast put descriptor vs
+         the cols-1 unicast fanout, derived + executor verification
   roofline  per (arch x shape x mesh) terms from results/dryrun
   throughput  tiny-config train tokens/s
 
 Worker failures are COUNTED and the harness exits nonzero (CI gates on
 this). ``--json PATH`` writes every parsed row + failures + invariant
-checks as one JSON record AND a repo-root ``BENCH_5.json`` perf-
-trajectory record (row-name -> derived latency, rows, invariants) that
-CI uploads so future PRs can diff derived numbers;
+checks as one JSON record AND a repo-root ``<BENCH_ID>.json`` perf-
+trajectory record (row-name -> derived latency, rows, invariants; the
+id comes from ``--bench-id``/``$BENCH_ID``, default BENCH_6) that CI
+uploads — and diffs against the previous PR's record via
+``scripts/check_trajectory.py`` — so regressions in derived numbers
+show up as a one-line diff instead of flying blind;
 ``--check-invariants`` asserts the Fig. 13
 structural ordering adaptive <= static <= application, the overlap
 rule (nstreams=2 + double_buffer derived cost <= single stream), the
 topology rules over the sweep grid (derived cost monotone in
 payload bytes, inter-node link strictly costlier than intra-node,
 multi-node mapping never cheaper than single-node, node-aware ordering
-never costlier than naive), and the aggregation rules (packed derived
+never costlier than naive), the aggregation rules (packed derived
 latency <= unpacked per pattern/link, packing the identity on single-
 node topologies, packed descriptor counts exactly as the group
-structure predicts) for every ST pattern. ``BENCH_SMOKE=1``
+structure predicts), the chunk-pipeline rule (chunked derived latency
+STRICTLY below monolithic at the large-message off-node points), and
+the multicast rule (one multicast descriptor strictly below the
+unicast fanout) for every ST pattern. ``BENCH_SMOKE=1``
 keeps only the small-grid configs (CI), ``BENCH_NITER`` overrides
 iterations per worker.
 """
@@ -106,7 +118,11 @@ def _worker(section="", **kw):
                                         kw.get("ranks_per_node", 0)),
                                     "node_aware": bool(int(
                                         kw.get("node_aware", 0))),
-                                    "pack": bool(int(kw.get("pack", 0)))})
+                                    "pack": bool(int(kw.get("pack", 0))),
+                                    "chunk_bytes": int(
+                                        kw.get("chunk_bytes", 0)),
+                                    "multicast": bool(int(
+                                        kw.get("multicast", 0)))})
                 except ValueError:
                     pass
     return True
@@ -344,6 +360,140 @@ def pack():
                 **kw)
 
 
+# large-message off-node points where chunked pipelining MUST win
+# (strict invariant): the put chain is NIC-bound, so per-chunk injection
+# overlaps the alpha that a monolithic put serializes. a2a at seq=128
+# rides along as an informational row (strict=False): its per-chunk
+# completion signals outweigh the alpha hiding there — chunking is not
+# free, and the trajectory records that honestly.
+_CHUNK_BYTES = 1024
+_CHUNK_POINTS = [
+    ("ring", (4,), 2, dict(seq_per_rank=64), "s64", True),
+    ("ring", (4,), 2, dict(seq_per_rank=128), "s128", True),
+    ("broadcast", (2, 4), 2, dict(tile=32), "t32", True),
+    ("broadcast", (2, 4), 2, dict(tile=48), "t48", True),
+    ("a2a", (4,), 2, dict(seq=128), "s128", False),
+]
+_CHUNK_CACHE = None
+
+
+def _chunk_points():
+    """Device-free chunked-vs-monolithic derived costs at the
+    large-message off-node points (adaptive, R=16 so the chunk chain
+    fits the descriptor slots — a chain longer than R throttles against
+    itself, rpn=2)."""
+    global _CHUNK_CACHE
+    if _CHUNK_CACHE is not None:
+        return _CHUNK_CACHE
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.core.patterns import simulate_pattern
+
+    pts = _CHUNK_POINTS if not SMOKE else [
+        p for p in _CHUNK_POINTS if p[4] in ("s64", "t32", "s128")]
+    niter = 4
+    out = []
+    for pat, grid, rpn, kw, tag, strict in pts:
+        mono = simulate_pattern(pat, niter, grid=grid, resources=16,
+                                ranks_per_node=rpn, **kw) / niter
+        chunked = simulate_pattern(pat, niter, grid=grid, resources=16,
+                                   ranks_per_node=rpn,
+                                   chunk_bytes=_CHUNK_BYTES, **kw) / niter
+        out.append(dict(pattern=pat, tag=tag, strict=strict,
+                        ranks_per_node=rpn, chunk_bytes=_CHUNK_BYTES,
+                        mono=mono, chunked=chunked))
+    _CHUNK_CACHE = out
+    return out
+
+
+def chunk():
+    """Chunked-pipelined transport: schedule.chunk_puts splits each
+    large off-node put into a chain of chunk descriptors (per-chunk NIC
+    injection, first-chunk-only alpha), so injection of chunk k+1
+    overlaps the tail of chunk k — derived rows per point, plus executor
+    workers (ring chunked, broadcast chunked+multicast) verifying the
+    chunked schedule bit-identical to the monolithic one in-process."""
+    print(f"# chunk: chunked pipeline (chunk_bytes={_CHUNK_BYTES}) vs "
+          "monolithic puts, adaptive R=16 rpn=2")
+    for p in _chunk_points():
+        for variant, derived in (("mono", p["mono"]),
+                                 ("c%d" % p["chunk_bytes"], p["chunked"])):
+            name = (f"chunk_{p['pattern']}_{p['tag']}"
+                    f"_rpn{p['ranks_per_node']}_{variant}")
+            print(f"{name},0.0,{derived:.2f}")
+            RESULTS.append(dict(section="chunk", name=name,
+                                us_per_call=0.0, derived=derived,
+                                nstreams=1, double_buffer=False,
+                                pattern=p["pattern"],
+                                ranks_per_node=p["ranks_per_node"],
+                                chunk_bytes=(0 if variant == "mono"
+                                             else p["chunk_bytes"]),
+                                node_aware=False, coalesce=False,
+                                pack=False))
+    _worker("chunk", pattern="ring", grid="4", block=64, mode="st",
+            throttle="adaptive", merged=1, resources=8,
+            ranks_per_node=2, chunk_bytes=_CHUNK_BYTES, verify_chunk=1,
+            name="chunk_ring_exec")
+    _worker("chunk", pattern="broadcast", grid="2,4", block=32, mode="st",
+            throttle="adaptive", merged=1, resources=8,
+            ranks_per_node=2, chunk_bytes=_CHUNK_BYTES, multicast=1,
+            verify_chunk=1, name="chunk_broadcast_exec")
+
+
+_BCAST_CACHE = None
+
+
+def _broadcast_points():
+    """Device-free multicast-vs-unicast-fanout derived costs on the
+    (2, 4) row-broadcast grid (adaptive, R=8, rpn=2)."""
+    global _BCAST_CACHE
+    if _BCAST_CACHE is not None:
+        return _BCAST_CACHE
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.core.patterns import simulate_pattern
+
+    tiles = [32] if SMOKE else [16, 32, 48]
+    niter = 4
+    out = []
+    for tile in tiles:
+        m = simulate_pattern("broadcast", niter, grid=(2, 4), resources=8,
+                             ranks_per_node=2, tile=tile,
+                             multicast=True) / niter
+        u = simulate_pattern("broadcast", niter, grid=(2, 4), resources=8,
+                             ranks_per_node=2, tile=tile,
+                             multicast=False) / niter
+        out.append(dict(tile=tile, mcast=m, ucast=u))
+    _BCAST_CACHE = out
+    return out
+
+
+def broadcast():
+    """SUMMA-style row fanout: ONE multicast put descriptor (one NIC
+    injection + one completion tree) vs cols-1 unicast puts — derived
+    rows per tile size, plus an executor worker verifying the multicast
+    program bit-identical to the unicast fanout in-process."""
+    print("# broadcast: multicast descriptor vs unicast fanout "
+          "((2,4) grid, adaptive R=8 rpn=2)")
+    for p in _broadcast_points():
+        for variant, derived in (("ucast", p["ucast"]),
+                                 ("mcast", p["mcast"])):
+            name = f"bcast_t{p['tile']}_rpn2_{variant}"
+            print(f"{name},0.0,{derived:.2f}")
+            RESULTS.append(dict(section="broadcast", name=name,
+                                us_per_call=0.0, derived=derived,
+                                nstreams=1, double_buffer=False,
+                                pattern="broadcast", ranks_per_node=2,
+                                chunk_bytes=0, node_aware=False,
+                                coalesce=False, pack=False))
+    _worker("broadcast", pattern="broadcast", grid="2,4", block=16,
+            mode="st", throttle="adaptive", merged=1, resources=8,
+            ranks_per_node=2, multicast=1, verify_multicast=1,
+            name="broadcast_mcast_exec")
+    _worker("broadcast", pattern="broadcast", grid="2,4", block=16,
+            mode="host", throttle="none", merged=1,
+            ranks_per_node=2, multicast=1, verify_multicast=1,
+            name="broadcast_mcast_host")
+
+
 def roofline():
     print("# roofline: per-cell terms from results/dryrun "
           "(us_per_call = bound step time; derived = roofline fraction)")
@@ -432,6 +582,44 @@ def check_invariants():
         print(f"# invariant {pat}: overlapped={overlapped:.2f} <= "
               f"single={t['adaptive']:.2f} -> {'OK' if ok2 else 'VIOLATED'}")
     checks += check_topology_invariants()
+    checks += check_chunk_invariants()
+    return checks
+
+
+def check_chunk_invariants():
+    """Chunked-pipeline and multicast invariants: at every strict
+    large-message off-node point the chunked schedule's derived latency
+    is STRICTLY below the monolithic one (per-chunk NIC injection hides
+    the alpha a monolithic put serializes), and the multicast descriptor
+    is strictly cheaper than its cols-1 unicast fanout (one injection +
+    one completion tree vs cols-1 of each)."""
+    eps = 1e-9
+    checks = []
+    print("# invariants: chunked < monolithic at strict points; "
+          "multicast < unicast fanout")
+    for p in _chunk_points():
+        if p["strict"]:
+            ok = p["chunked"] < p["mono"] - eps
+            rule = "chunk_pipeline"
+            rel = "<"
+        else:
+            ok = True          # informational point: recorded, not gated
+            rule = "chunk_info"
+            rel = "vs"
+        checks.append(dict(rule=rule, pattern=p["pattern"], ok=ok,
+                           tag=p["tag"], chunk_bytes=p["chunk_bytes"],
+                           chunked=p["chunked"], mono=p["mono"]))
+        print(f"# invariant {rule} {p['pattern']} {p['tag']}: "
+              f"chunked={p['chunked']:.2f} {rel} mono={p['mono']:.2f} -> "
+              f"{'OK' if ok else 'VIOLATED'}")
+    for p in _broadcast_points():
+        ok = p["mcast"] < p["ucast"] - eps
+        checks.append(dict(rule="multicast", pattern="broadcast", ok=ok,
+                           tile=p["tile"], mcast=p["mcast"],
+                           ucast=p["ucast"]))
+        print(f"# invariant multicast t{p['tile']}: "
+              f"mcast={p['mcast']:.2f} < ucast={p['ucast']:.2f} -> "
+              f"{'OK' if ok else 'VIOLATED'}")
     return checks
 
 
@@ -573,8 +761,8 @@ def check_pack_invariants(points, by_cfg, eps):
 SECTIONS = {
     "fig12": fig12, "fig13": fig13, "fig14": fig14, "fig15": fig15,
     "fig16_17": fig16_17, "ring": ring, "a2a": a2a, "overlap": overlap,
-    "sweep": sweep, "pack": pack, "roofline": roofline,
-    "throughput": throughput,
+    "sweep": sweep, "pack": pack, "chunk": chunk, "broadcast": broadcast,
+    "roofline": roofline, "throughput": throughput,
 }
 
 
@@ -589,6 +777,10 @@ def main() -> None:
                     help="assert adaptive <= static <= application and "
                          "overlapped <= single-stream on derived costs "
                          "for every ST pattern")
+    ap.add_argument("--bench-id",
+                    default=os.environ.get("BENCH_ID", "BENCH_6"),
+                    help="basename of the repo-root perf-trajectory "
+                         "record --json also writes (env: BENCH_ID)")
     args = ap.parse_args()
     names = (args.only.split(",") if args.only else list(SECTIONS))
     print("name,us_per_call,derived")
@@ -609,13 +801,14 @@ def main() -> None:
         print(f"# wrote {args.json} ({len(RESULTS)} rows, "
               f"{len(FAILURES)} failures)")
         # the perf trajectory: a repo-root record future PRs diff derived
-        # numbers against (CI uploads it as an artifact) — a map from row
-        # name to derived latency plus the full rows and invariant
-        # verdicts, so regressions show up as a one-line diff instead of
-        # flying blind
-        traj = os.path.join(ROOT, "BENCH_5.json")
+        # numbers against (CI uploads it as an artifact and
+        # scripts/check_trajectory.py diffs it against the previous
+        # PR's record) — a map from row name to derived latency plus the
+        # full rows and invariant verdicts, so regressions show up as a
+        # one-line diff instead of flying blind
+        traj = os.path.join(ROOT, f"{args.bench_id}.json")
         with open(traj, "w") as f:
-            json.dump({"bench_id": "BENCH_5", "sections": names,
+            json.dump({"bench_id": args.bench_id, "sections": names,
                        "derived": {r["name"]: r["derived"]
                                    for r in RESULTS},
                        "rows": RESULTS,

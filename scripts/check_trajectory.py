@@ -1,0 +1,122 @@
+"""Perf-trajectory regression gate: diff two BENCH_N.json records.
+
+``benchmarks/run.py --json`` writes a repo-root ``<BENCH_ID>.json``
+trajectory record whose ``derived`` map takes row names to derived
+critical-path latencies (us/iter from the calibrated simulator). This
+checker diffs the committed record of the PREVIOUS PR against the one
+the current run just produced and fails on regressions:
+
+  * rows present in BOTH records whose derived latency grew by more
+    than ``--threshold`` (relative, default 10%) fail the gate —
+    unless their name matches a ``--waive`` regex (for intentional
+    rebaselines, e.g. a cost-model fix that legitimately moves rows);
+  * tiny rows are compared with an absolute floor (``--abs-eps`` us)
+    so numeric noise on near-zero latencies never trips the gate;
+  * added/removed rows are reported but never fail (sections come and
+    go as the repo grows);
+  * a missing OLD record passes with a note (first run of a new id).
+
+Exit status: 0 clean / 1 regressions found / 2 usage or parse error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+
+def load_derived(path):
+    with open(path) as f:
+        rec = json.load(f)
+    derived = rec.get("derived")
+    if not isinstance(derived, dict):
+        # tolerate a raw harness --json record (rows list, no map)
+        rows = rec.get("rows", [])
+        derived = {r["name"]: r["derived"] for r in rows
+                   if "name" in r and "derived" in r}
+    return {str(k): float(v) for k, v in derived.items()}, rec
+
+
+def compare(old, new, threshold, abs_eps, waive):
+    """Return (regressions, improvements, added, removed); a regression
+    is (name, old, new, rel_change)."""
+    regressions, improvements = [], []
+    waived = re.compile(waive) if waive else None
+    for name in sorted(set(old) & set(new)):
+        o, n = old[name], new[name]
+        if n <= o + abs_eps:
+            if o > n + abs_eps:
+                improvements.append((name, o, n))
+            continue
+        rel = (n - o) / o if o > abs_eps else float("inf")
+        if rel <= threshold:
+            continue
+        if waived is not None and waived.search(name):
+            improvements.append((name, o, n))   # reported, not gated
+            continue
+        regressions.append((name, o, n, rel))
+    added = sorted(set(new) - set(old))
+    removed = sorted(set(old) - set(new))
+    return regressions, improvements, added, removed
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="fail on derived-latency regressions between two "
+                    "BENCH_N.json trajectory records")
+    ap.add_argument("--old", required=True,
+                    help="previous PR's trajectory record (missing file "
+                         "passes with a note)")
+    ap.add_argument("--new", required=True,
+                    help="trajectory record this run produced")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative growth a matching row may show "
+                         "before failing (default 0.10 = 10%%)")
+    ap.add_argument("--abs-eps", type=float, default=0.5,
+                    help="absolute slack in us: growth below this never "
+                         "fails (noise floor for near-zero rows)")
+    ap.add_argument("--waive", default=None, metavar="REGEX",
+                    help="row names matching this regex are exempt "
+                         "(intentional rebaselines)")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.old):
+        print(f"trajectory: no previous record at {args.old} — "
+              "nothing to diff, passing")
+        return 0
+    try:
+        old, _ = load_derived(args.old)
+        new, _ = load_derived(args.new)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"trajectory: cannot parse records: {e}", file=sys.stderr)
+        return 2
+
+    regressions, improvements, added, removed = compare(
+        old, new, args.threshold, args.abs_eps, args.waive)
+
+    print(f"trajectory: {len(set(old) & set(new))} matching rows, "
+          f"{len(added)} added, {len(removed)} removed")
+    for name, o, n in improvements:
+        print(f"  ok       {name}: {o:.2f} -> {n:.2f}")
+    if added:
+        print(f"  new rows: {', '.join(added[:10])}"
+              + (" ..." if len(added) > 10 else ""))
+    if removed:
+        print(f"  gone rows: {', '.join(removed[:10])}"
+              + (" ..." if len(removed) > 10 else ""))
+    for name, o, n, rel in regressions:
+        print(f"  REGRESSED {name}: {o:.2f} -> {n:.2f} "
+              f"(+{rel * 100:.0f}% > {args.threshold * 100:.0f}%)",
+              file=sys.stderr)
+    if regressions:
+        print(f"trajectory: {len(regressions)} row(s) regressed",
+              file=sys.stderr)
+        return 1
+    print("trajectory: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

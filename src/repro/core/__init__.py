@@ -16,9 +16,9 @@ from repro.core.patterns import (PatternTopology, STPattern,
                                  available_patterns, build_pattern,
                                  get_pattern, pattern_programs,
                                  register_pattern, simulate_pattern)
-from repro.core.schedule import (assign_streams, node_aware_pass, pack_puts,
-                                 schedule, stream_interleaved_order,
-                                 validate_deps)
+from repro.core.schedule import (assign_streams, chunk_puts,
+                                 node_aware_pass, pack_puts, schedule,
+                                 stream_interleaved_order, validate_deps)
 from repro.core.throttle import (CostModel, faces_programs, simulate_faces,
                                  simulate_pipeline, simulate_program)
 from repro.core import halo
@@ -27,7 +27,7 @@ __all__ = ["STStream", "STWindow", "TriggeredOp", "TriggeredProgram",
            "ResourcePool", "CostModel", "PatternTopology", "STPattern",
            "counters_expected", "lower_segment", "split_segments",
            "schedule", "assign_streams", "node_aware_pass", "pack_puts",
-           "stream_interleaved_order",
+           "chunk_puts", "stream_interleaved_order",
            "validate_deps", "register_pattern", "get_pattern",
            "available_patterns", "build_pattern", "pattern_programs",
            "simulate_pattern", "simulate_program", "simulate_pipeline",

@@ -24,6 +24,14 @@ pack -> single ppermute -> unpack (fewer collectives and barrier ties
 in the HLO), run_host issues one dispatch for the whole group — the
 host-dispatch saving behind the paper's off-node P2P gap.
 
+Chunked-pipelined puts (schedule.chunk_puts) emit one unit PER CHUNK:
+run_compiled traces each chunk's gather -> ppermute -> scatter with
+only real dependency edges between them (chunks of different puts
+interleave freely in the HLO), run_host dispatches each chunk as its
+own descriptor. Multicast puts emit one unit fanning the single traced
+payload over every branch permutation, with ONE chained completion
+tree (slots-based) standing for all branches.
+
 Signals and completions are REAL counter buffers updated by chained tiny
 puts (paper §3.1–3.2), so tests can assert the epoch protocol.
 """
@@ -38,7 +46,8 @@ import numpy as np
 from repro.core.compat import shard_map
 from repro.core.schedule import stream_interleaved_order
 from repro.core.window import is_counter_name
-from repro.kernels.halo_pack.ref import pack_flat, unpack_flat
+from repro.kernels.halo_pack.ref import (chunk_gather, chunk_scatter,
+                                         pack_flat, unpack_flat)
 
 
 def _tie(x, dep):
@@ -95,23 +104,35 @@ def _arrival_mask(stream, direction):
 
 
 def _emit_completion_signal(stream, node, st, arrival_token):
-    """§3.2 chained completion signal of a put descriptor."""
+    """§3.2 chained completion signal of a put descriptor. A multicast
+    put's chained signal is the completion TREE: one signal op whose
+    leaves bump each branch target's slot (``ch.slots``); unicast puts
+    have the single (slot, direction) leaf."""
     ch = node.chained
+    branches = ch.slots or ((ch.slot, node.direction),)
     if ch.wire:
         # a second triggered put bumping the TARGET's comp counter over
         # the wire, triggered by the payload's arrival
         one = _tie(jnp.ones((1, 1), jnp.int32), arrival_token)
-        sig = _ppermute(stream, one, node.direction)
-        st[ch.counter] = st[ch.counter].at[:, ch.slot].add(sig[:, 0])
+        sig_buf = st[ch.counter]
+        for slot, d in branches:
+            sig = _ppermute(stream, one, d)
+            sig_buf = sig_buf.at[:, slot].add(sig[:, 0])
+        st[ch.counter] = sig_buf
     else:
         # merged/local bump: the arrived payload IS the completion event
         one = _tie(jnp.ones((1,), jnp.int32), arrival_token)
-        if not stream.periodic:
-            # a boundary rank with no source in this direction received
-            # only the zero-fill, not a payload: no completion lands
-            mask = jnp.asarray(_arrival_mask(stream, node.direction))
-            one = one * mask[_local_rank(stream)]
-        st[ch.counter] = st[ch.counter].at[:, ch.slot].add(one)
+        sig_buf = st[ch.counter]
+        for slot, d in branches:
+            bump = one
+            if not stream.periodic:
+                # a boundary rank with no source in this direction
+                # received only the zero-fill, not a payload: no
+                # completion lands
+                mask = jnp.asarray(_arrival_mask(stream, d))
+                bump = bump * mask[_local_rank(stream)]
+            sig_buf = sig_buf.at[:, slot].add(bump)
+        st[ch.counter] = sig_buf
     return st
 
 
@@ -164,7 +185,20 @@ def emit_node(stream, node, st, ctx, *, with_chained=True):
         ctx.trig[(node.window, node.epoch)] = snap
         ctx.tokens[node.op_id] = snap.ravel()[:1]
     elif node.kind == "put":
-        if len(node.srcs) > 1:
+        packed = len(node.srcs) > 1
+        chunked = node.chunk_count > 1
+        if chunked:
+            # one CHUNK of a pipelined chain (schedule.chunk_puts):
+            # gather only this chunk's element slice of the logical flat
+            # payload (the group concat for packed puts) — the staging
+            # slices of different chunks trace independently, so
+            # pack(k+1) overlaps wire(k) overlaps unpack(k-1) with no
+            # artificial barriers between chunks of different puts
+            parts = ([st[s] for s in node.srcs] if packed
+                     else [st[node.src]])
+            payload = chunk_gather(parts, node.chunk_offset,
+                                   node.chunk_elems)
+        elif packed:
             # packed multi-buffer descriptor (schedule.pack_puts): pack
             # the group's payloads into ONE contiguous staging buffer,
             # ride ONE collective (every member shares the same rank
@@ -177,15 +211,39 @@ def emit_node(stream, node, st, ctx, *, with_chained=True):
         payload = _tie(payload, ctx.trig.get((node.window, node.epoch)))
         for dep in node.deps:
             payload = _tie(payload, ctx.tokens.get(dep))
-        arrived = _ppermute(stream, payload, node.direction)
-        if len(node.srcs) > 1:
-            for dst, part in zip(node.dsts,
-                                 unpack_flat(arrived,
-                                             [st[d] for d in node.dsts])):
-                st[dst] = part
+        if node.mcast_dirs:
+            # multicast descriptor: the ONE traced payload fans out over
+            # every branch permutation (the executor analogue of switch
+            # replication) and lands in its branch's dst buffer; the
+            # single chained signal below is the completion tree
+            token = None
+            for d, dname in zip(node.mcast_dirs, node.dsts):
+                arrived = _ppermute(stream, payload, d)
+                if chunked:
+                    st[dname], = chunk_scatter(arrived, [st[dname]],
+                                               node.chunk_offset,
+                                               node.chunk_elems)
+                else:
+                    st[dname] = arrived
+                tok = arrived.ravel()[:1]
+                token = tok if token is None else _tie(token, tok)
         else:
-            st[node.dst] = arrived
-        token = arrived.ravel()[:1]
+            arrived = _ppermute(stream, payload, node.direction)
+            if chunked:
+                dnames = node.dsts if packed else (node.dst,)
+                updated = chunk_scatter(arrived, [st[d] for d in dnames],
+                                        node.chunk_offset,
+                                        node.chunk_elems)
+                for dname, new in zip(dnames, updated):
+                    st[dname] = new
+            elif packed:
+                for dst, part in zip(
+                        node.dsts,
+                        unpack_flat(arrived, [st[d] for d in node.dsts])):
+                    st[dst] = part
+            else:
+                st[node.dst] = arrived
+            token = arrived.ravel()[:1]
         ctx.tokens[node.op_id] = token
         if with_chained and node.chained is not None:
             st = _emit_completion_signal(stream, node, st, token)
@@ -288,8 +346,11 @@ def _dispatch_host(stream, node, state, unit):
             st = dict(zip(keys, vals))
             ctx = _EmitCtx()
             if unit == "chained":
+                # arrival token: any buffer the put delivered into (a
+                # multicast/packed put has dsts and no single dst)
+                landed = node.dst or node.dsts[-1]
                 st = _emit_completion_signal(
-                    stream, node, st, st[node.dst].ravel()[:1])
+                    stream, node, st, st[landed].ravel()[:1])
             else:
                 # deps tie through ctx.tokens, which is empty per dispatch:
                 # host ordering comes from the serialized dispatches

@@ -19,7 +19,10 @@ descriptors with named trigger/completion counter slots:
               permutation (``perm``), source dtype, and real byte size —
               so a packed group's single chained signal stands for the
               whole group and the wait's ``expected_puts`` can be
-              recounted per descriptor, not per buffer.
+              recounted per descriptor, not per buffer. A MULTICAST put
+              (``put_multicast``) lowers to one descriptor carrying
+              every branch direction (``mcast_dirs``) and one chained
+              completion tree (slots-based, one signal at the source).
   * complete -> emits the epoch's deferred puts, then an epoch-close
               marker; the global epoch index increments here.
   * wait   -> a wait-kernel descriptor polling the completion counter.
@@ -118,6 +121,37 @@ def lower_segment(stream, seg) -> TriggeredProgram:
                 "start", window=win.name,
                 counter=win.post_sig_at(op.phase),
                 epoch=epoch, phase=op.phase, label=op.label))
+        elif op.kind == "put" and "directions" in op.put:
+            # multicast put (STStream.put_multicast): ONE src payload
+            # fans out to every branch direction's rank — one descriptor,
+            # one NIC injection (the switch replicates), and ONE chained
+            # completion tree whose leaves bump each branch target's
+            # comp slot (counted as one signal at the source). Lands on
+            # "inter" when ANY branch crosses a node boundary. perm stays
+            # empty: a one-to-many descriptor never joins a pack group.
+            win = op.window
+            dirs = tuple(tuple(d) for d in op.put["directions"])
+            slots = tuple((win.opposite_index(d), d) for d in dirs)
+            link = "intra"
+            for d in dirs:
+                branch_link, _, _ = put_link(stream, win, d)
+                if branch_link == "inter":
+                    link = "inter"
+            chained = TriggeredOp(
+                "signal", window=win.name, role="completion",
+                direction=dirs[0], slots=slots, fused=True,
+                counter=win.comp_sig_at(op.phase), wire=True,
+                phase=op.phase, label=f"comp_mcast[{len(dirs)}]")
+            nbytes, dtype = buffer_spec(stream, op.put["src"])
+            pending.setdefault(win.name, []).append(TriggeredOp(
+                "put", window=win.name, src=op.put["src"],
+                dsts=tuple(op.put["dsts"]), direction=dirs[0],
+                mcast_dirs=dirs, nbytes=nbytes, dtype=dtype, link=link,
+                trigger_counter=(f"{win.post_sig_at(op.phase)}"
+                                 f"[{win.group.index(dirs[0])}]"),
+                completion_counter=win.comp_sig_at(op.phase),
+                chained=chained, phase=op.phase,
+                label=f"mput[{len(dirs)}]"))
         elif op.kind == "put":
             win = op.window
             d = tuple(op.put["direction"])
@@ -151,7 +185,11 @@ def lower_segment(stream, seg) -> TriggeredProgram:
                 "complete", window=win.name, epoch=epoch, phase=op.phase))
             closed[win.name] = epoch
             nclosed[(win.name, op.phase % 2)] = arm + 1
-            last_dsts[win.name] = tuple(p.dst for p in flushed)
+            # a multicast put delivers into its per-branch dsts (dst is
+            # None); the wait fence must cover every landing buffer
+            last_dsts[win.name] = tuple(
+                d for p in flushed
+                for d in (p.dsts if p.dsts else (p.dst,)) if d)
             put_counts[(win.name, epoch)] = len(flushed)
             epoch += 1
         elif op.kind == "wait":

@@ -19,6 +19,9 @@ Built-in patterns (registered by their home modules on first use):
   * ``"a2a"``   — expert-parallel MoE combine as an aggregated-put
     access epoch: each shard's partial output is put to every peer and
     summed, replacing the psum collective (repro.core.ep_a2a)
+  * ``"broadcast"`` — SUMMA-style row fanout: each rank's tile goes to
+    every peer of its process row, either as one MULTICAST descriptor
+    or as a unicast-per-peer fanout baseline (repro.core.broadcast)
 
 A topology owns the *direction algebra* that stage-1 lowering needs:
 which peers a window signals at post(), and which counter slot a put's
@@ -121,6 +124,20 @@ def shifts_topology(n: int, grid_axes=("model",),
                            ranks_per_node=ranks_per_node)
 
 
+def row_broadcast_topology(rows: int, cols: int, grid_axes=("row", "col"),
+                           ranks_per_node: Optional[int] = None
+                           ) -> PatternTopology:
+    """Row fanout on a (rows, cols) grid: every nonzero column shift
+    (0, k), k in 1..cols-1 — each rank reaches its whole process row.
+    Opposite is modular on the column axis ((0, k) -> (0, cols-k)), so
+    the group is closed; the one-to-many broadcast pattern multicasts
+    over exactly this group."""
+    return PatternTopology("row_broadcast", tuple(grid_axes),
+                           tuple((0, k) for k in range(1, cols)),
+                           modular_opposite=True, grid_shape=(rows, cols),
+                           ranks_per_node=ranks_per_node)
+
+
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
@@ -155,7 +172,7 @@ def register_pattern(name: str, *, grid_axes, default_grid, doc: str = ""):
 
 def _ensure_builtins():
     # builders live with their transports; importing registers them
-    from repro.core import ep_a2a, halo, ring  # noqa: F401
+    from repro.core import broadcast, ep_a2a, halo, ring  # noqa: F401
 
 
 def available_patterns() -> List[str]:
@@ -187,7 +204,7 @@ def pattern_programs(name: str, niter: int, *, grid=None,
                      double_buffer: bool = False,
                      ranks_per_node: Optional[int] = None,
                      node_aware: bool = False, coalesce: bool = False,
-                     pack: bool = False,
+                     pack: bool = False, chunk_bytes: int = 0,
                      **build_kw):
     """Lower+schedule a pattern on a device-free stream — the same
     builder and passes the executors use, minus a mesh. ``nstreams>1``
@@ -198,7 +215,9 @@ def pattern_programs(name: str, niter: int, *, grid=None,
     intra/inter link tags); ``node_aware``/``coalesce`` run the
     node-aware schedule pass (off-node puts first, optional same-target-
     node aggregation); ``pack`` materializes off-node aggregation groups
-    as packed multi-buffer put descriptors (schedule.pack_puts)."""
+    as packed multi-buffer put descriptors (schedule.pack_puts);
+    ``chunk_bytes`` splits larger off-node puts into pipelined chunk
+    chains (schedule.chunk_puts)."""
     from repro.core.stream import STStream
 
     p = get_pattern(name)
@@ -211,7 +230,8 @@ def pattern_programs(name: str, niter: int, *, grid=None,
                                      merged=merged, ordered=ordered,
                                      nstreams=nstreams,
                                      node_aware=node_aware,
-                                     coalesce=coalesce, pack=pack)
+                                     coalesce=coalesce, pack=pack,
+                                     chunk_bytes=chunk_bytes)
 
 
 def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
@@ -221,7 +241,7 @@ def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
                      double_buffer: bool = False,
                      ranks_per_node: Optional[int] = None,
                      node_aware: bool = False, coalesce: bool = False,
-                     pack: bool = False,
+                     pack: bool = False, chunk_bytes: int = 0,
                      **build_kw) -> float:
     """Derived critical-path time of ``niter`` pattern iterations.
 
@@ -235,7 +255,9 @@ def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
     ``node_aware``/``coalesce`` apply the node-aware ordering pass;
     ``pack`` materializes off-node aggregation groups as packed
     multi-buffer descriptors (one alpha + summed beta + one NIC
-    injection per group)."""
+    injection per group); ``chunk_bytes`` splits larger off-node puts
+    into pipelined chunk chains (per-chunk beta, first-chunk-only
+    alpha)."""
     from repro.core.throttle import simulate_pipeline
 
     host_sync_every = 1 if policy == "application" else 0
@@ -247,6 +269,6 @@ def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
                              nstreams=nstreams, double_buffer=double_buffer,
                              ranks_per_node=ranks_per_node,
                              node_aware=node_aware, coalesce=coalesce,
-                             pack=pack,
+                             pack=pack, chunk_bytes=chunk_bytes,
                              **build_kw)
     return simulate_pipeline(progs, cm, host_orchestrated)

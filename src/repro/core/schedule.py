@@ -32,12 +32,23 @@ Passes
     multi-buffer descriptor — one staging pack, one collective, one
     chained completion signal, one NIC injection. Runs before
     throttling so the finite descriptor slots count PACKED descriptors.
+  * :func:`chunk_puts` — chunked-pipelined transport: any off-node put
+    whose payload exceeds ``chunk_bytes`` is rewritten into a CHAIN of
+    chunk descriptors (contiguous element slices of the logical flat
+    payload), each with its own chained completion signal, and NO
+    dependency edges between the chunks — the NIC injection timeline
+    serializes them naturally, so pack(k+1) overlaps wire(k) overlaps
+    unpack(k-1) and only the first chunk pays the per-message alpha.
+    Runs after pack_puts (packed descriptors chunk over their staging
+    concat) and before throttle_pass (slots hold chunk descriptors).
   * :func:`node_aware_pass` — topology-aware put ordering: within each
     epoch's put run, off-node ("inter"-link) puts issue FIRST so their
     long latency and serialized NIC injection overlap the on-node puts
     and compute; ``coalesce`` marks adjacent same-target-node off-node
-    puts as aggregated (one message alpha per group). Dependency edges
-    are never crossed, so the executors stay bit-identical.
+    puts as aggregated (an ordering/bookkeeping hint — since pack_puts
+    materialized real aggregation, the marking carries no cost
+    discount). Dependency edges are never crossed, so the executors
+    stay bit-identical.
   * :func:`assign_streams` — multi-stream overlap (paper §2/§6.7: the
     separate communication stream is what lets the NIC move epoch e+1's
     bytes while the device computes epoch e): partition the DAG onto a
@@ -59,6 +70,8 @@ Passes
 from __future__ import annotations
 
 from collections import defaultdict
+
+import numpy as np
 
 from repro.core.triggered import ResourcePool, TriggeredOp, TriggeredProgram
 
@@ -187,6 +200,8 @@ def _pack_run(run, windows, remap, groups_meta):
     groups: dict = {}
     order = []
     for p in free:
+        # multicast descriptors carry no perm (one payload, many branch
+        # permutations) and therefore always stay solo
         if p.link != "inter" or not p.perm:
             key = ("solo", p.op_id)
         else:
@@ -282,6 +297,118 @@ def pack_puts(prog: TriggeredProgram, pack: bool = True) -> TriggeredProgram:
 
 
 # ---------------------------------------------------------------------------
+# chunked-pipelined transport: split large puts into chunk chains
+# ---------------------------------------------------------------------------
+
+def _clone_chained(c0, k):
+    """Tail chunk's own chained completion signal — a structural copy of
+    the head's (post-fusion, so ``wire``/``fused`` are already resolved):
+    every chunk's arrival bumps the same counter slot(s), and the wait's
+    ``expected_puts`` is recounted per chunk to match."""
+    return TriggeredOp(
+        "signal", window=c0.window, role="completion",
+        direction=c0.direction, slot=c0.slot, slots=c0.slots,
+        fused=c0.fused, wire=c0.wire, counter=c0.counter,
+        epoch=c0.epoch, phase=c0.phase, label=f"{c0.label}#c{k}")
+
+
+def chunk_puts(prog: TriggeredProgram,
+               chunk_bytes: int = 0) -> TriggeredProgram:
+    """Chunked-pipelined transport: rewrite any off-node put whose
+    payload exceeds ``chunk_bytes`` into a chain of chunk descriptors.
+
+    Each chunk is a contiguous ELEMENT slice of the put's logical flat
+    payload (for a packed descriptor: the staging concat of its group),
+    carrying the head's buffers/permutation/trigger plus its own chained
+    completion signal. The head mutates in place and keeps its op_id —
+    chunk 0 of the chain — so existing dependency edges stay valid;
+    edges naming a chunked put are then WIDENED with the tail op_ids
+    (depending on a put means "payload fully delivered" = all chunks).
+    Chunks carry NO dependency edges on each other: serializing them
+    would forfeit the pipelining — the rank's NIC injection timeline
+    (and, in the executors, emission order on the issuing stream) keeps
+    them ordered, while chunks of DIFFERENT puts interleave freely.
+    Only the first chunk pays the per-message alpha in the cost model;
+    every chunk pays its own beta and ``t_issue``.
+
+    On-node ("intra") puts never chunk, mirroring pack_puts: pipelined
+    chunking is a NIC-descriptor feature; the xGMI fabric moves on-node
+    payloads in parallel already. ``wait.expected_puts`` is recounted
+    per chunk so the simulator's completion accounting still catches
+    every lost signal."""
+    prog.meta["chunk_bytes"] = int(chunk_bytes)
+    if chunk_bytes <= 0:
+        return prog
+    out: list = []
+    groups_meta: list = []
+    tails_of: dict = {}                    # head op_id -> tail op_ids
+    for n in prog.nodes:
+        if (n.kind != "put" or n.link != "inter" or not n.dtype
+                or n.nbytes <= chunk_bytes):
+            out.append(n)
+            continue
+        itemsize = np.dtype(n.dtype).itemsize
+        total = n.nbytes // itemsize
+        per = max(1, int(chunk_bytes) // itemsize)
+        nchunks = -(-total // per)
+        base_label = n.label
+        n.chunk_index, n.chunk_count = 0, nchunks
+        n.chunk_offset, n.chunk_elems = 0, min(per, total)
+        n.chunk_head = n.op_id
+        n.nbytes = n.chunk_elems * itemsize
+        n.label = f"{base_label}#c0/{nchunks}"
+        if n.chained is not None:
+            n.chained.label = f"{n.chained.label}#c0"
+        out.append(n)
+        tails = []
+        for k in range(1, nchunks):
+            off = k * per
+            cnt = min(per, total - off)
+            t = TriggeredOp(
+                "put", window=n.window, src=n.src, dst=n.dst,
+                srcs=n.srcs, dsts=n.dsts, direction=n.direction,
+                mcast_dirs=n.mcast_dirs, nbytes=cnt * itemsize,
+                dtype=n.dtype, perm=n.perm, link=n.link,
+                node_deltas=n.node_deltas, epoch=n.epoch, phase=n.phase,
+                trigger_counter=n.trigger_counter, threshold=n.threshold,
+                completion_counter=n.completion_counter,
+                chained=(_clone_chained(n.chained, k)
+                         if n.chained is not None else None),
+                deps=tuple(n.deps), chunk_index=k, chunk_count=nchunks,
+                chunk_offset=off, chunk_elems=cnt, chunk_head=n.op_id,
+                label=f"{base_label}#c{k}/{nchunks}")
+            tails.append(t)
+            out.append(t)
+        tails_of[n.op_id] = tuple(t.op_id for t in tails)
+        win = prog.windows.get(n.window)
+        staging = (win.chunk_staging(n.epoch, n.phase, nchunks)
+                   if win is not None else f"{n.window}.__chunk")
+        groups_meta.append({"head": n.op_id, "staging": staging,
+                            "chunks": nchunks, "elems": total,
+                            "members": [n.op_id]
+                            + [t.op_id for t in tails]})
+    if tails_of:
+        for n in out:
+            if n.deps and any(d in tails_of for d in n.deps):
+                deps = []
+                for d in n.deps:
+                    deps.append(d)
+                    deps.extend(tails_of.get(d, ()))
+                n.deps = tuple(dict.fromkeys(deps))
+    prog.nodes = out
+    counts: dict = {}
+    for n in out:
+        if n.kind == "put":
+            k = (n.window, n.epoch)
+            counts[k] = counts.get(k, 0) + 1
+    for n in out:
+        if n.kind == "wait" and n.expected_puts >= 0:
+            n.expected_puts = counts.get((n.window, n.epoch), 0)
+    prog.meta["chunked_groups"] = groups_meta
+    return prog
+
+
+# ---------------------------------------------------------------------------
 # node-aware ordering (off-node transfers first, optional aggregation)
 # ---------------------------------------------------------------------------
 
@@ -311,9 +438,11 @@ def node_aware_pass(prog: TriggeredProgram, node_aware: bool = True,
     never reordering across a dependency edge, so both executors stay
     bit-identical to the naive order (same DAG, different emission
     order). ``coalesce`` additionally marks the tail puts of adjacent
-    same-target-node ("node_deltas") off-node groups as ``aggregated``:
-    they ride the head put's message, so the cost model waives their
-    per-message alpha (node-aware aggregation)."""
+    same-target-node ("node_deltas") off-node groups as ``aggregated``
+    — a bookkeeping/ordering hint identifying coalescible runs. The
+    marking carries NO cost discount: materialized aggregation
+    (pack_puts) replaced the simulator-only alpha waiver, so the cost
+    model prices every real message's alpha."""
     prog.meta["node_aware"] = bool(node_aware)
     prog.meta["coalesce"] = bool(coalesce)
     if not node_aware:
@@ -336,14 +465,15 @@ def node_aware_pass(prog: TriggeredProgram, node_aware: bool = True,
         i = j
     prog.nodes = out
     if coalesce:
-        # packed multi-buffer descriptors (pack_puts) are MATERIALIZED
-        # aggregation: each one is a real wire message that pays its
-        # alpha, so it must neither be marked aggregated (that would
-        # waive a real message's alpha — double-counting the discount
-        # packing replaces) nor anchor a marked group
+        # packed multi-buffer descriptors (pack_puts) and chunk/multicast
+        # descriptors (chunk_puts / put_multicast) are MATERIALIZED
+        # transport shapes — each a real wire message — so they neither
+        # receive the aggregated marking nor anchor a marked group
         prev = None
         for n in prog.nodes:
-            packed = n.kind == "put" and len(n.srcs) > 1
+            packed = n.kind == "put" and (len(n.srcs) > 1
+                                          or n.chunk_count > 1
+                                          or bool(n.mcast_dirs))
             if (n.kind == "put" and not packed and prev is not None
                     and n.link == "inter" and prev.link == "inter"
                     and n.window == prev.window and n.epoch == prev.epoch
@@ -484,20 +614,26 @@ def schedule(prog: TriggeredProgram, *, throttle: str = "adaptive",
              ordered: bool = False, nstreams: int = 1,
              node_aware: bool = False,
              coalesce: bool = False,
-             pack: bool = False) -> TriggeredProgram:
+             pack: bool = False,
+             chunk_bytes: int = 0) -> TriggeredProgram:
     """Apply all schedule passes; returns the same (mutated) program.
 
     ``pack`` runs after the ordering pass (P2P chains gate every put, so
     an ordered program packs nothing — aggregation and message-matching
     semantics are mutually exclusive by construction) and BEFORE
     throttling, because the finite triggered-op slots hold descriptors:
-    a packed group consumes one. ``node_aware`` runs after throttling
-    (it must respect every dependency edge the earlier passes placed)
-    and before stream assignment (the cross-stream conflict edges are
-    derived from the final emission order)."""
+    a packed group consumes one. ``chunk_bytes`` runs between them —
+    after pack (a packed descriptor chunks over its staging concat,
+    composing the two) and before throttle (the slots hold CHUNK
+    descriptors; each in-flight chunk occupies one). ``node_aware``
+    runs after throttling (it must respect every dependency edge the
+    earlier passes placed) and before stream assignment (the
+    cross-stream conflict edges are derived from the final emission
+    order)."""
     prog = fuse_signals(prog, merged)
     prog = ordering_pass(prog, ordered)
     prog = pack_puts(prog, pack)
+    prog = chunk_puts(prog, chunk_bytes)
     prog = throttle_pass(prog, throttle, resources)
     prog = node_aware_pass(prog, node_aware, coalesce)
     prog = assign_streams(prog, nstreams)

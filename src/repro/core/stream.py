@@ -149,6 +149,21 @@ class STStream:
                                 put=dict(src=src, dst=dst,
                                          direction=tuple(direction))))
 
+    def put_multicast(self, win: STWindow, src: str, dsts, directions,
+                      phase: int = 0):
+        """One-to-many put: ONE source payload fans out to the rank in
+        each of ``directions``, landing in the matching buffer of
+        ``dsts`` — lowered to a single multicast descriptor with one
+        completion tree (counted as one signal at the source), versus
+        ``len(directions)`` unicast puts."""
+        if len(dsts) != len(directions):
+            raise ValueError("put_multicast: dsts and directions must "
+                             "pair up per branch")
+        self.program.append(_Op(
+            "put", window=win, phase=phase,
+            put=dict(src=src, dsts=tuple(dsts),
+                     directions=tuple(tuple(d) for d in directions))))
+
     def complete(self, win: STWindow, phase: int = 0):
         self.program.append(_Op("complete", window=win, phase=phase))
 
@@ -216,14 +231,15 @@ class STStream:
                            ordered: bool = False, nstreams: int = 1,
                            node_aware: bool = False,
                            coalesce: bool = False,
-                           pack: bool = False) -> List[TriggeredProgram]:
+                           pack: bool = False,
+                           chunk_bytes: int = 0) -> List[TriggeredProgram]:
         """Lower the op queue and run the schedule passes; one scheduled
         descriptor DAG per host_sync-delimited segment. Cached per
         (queue, options) so repeated synchronize calls reuse programs
         (and therefore compiled executables)."""
         key = (tuple(op.cache_key() for op in self.program),
                throttle, resources, merged, ordered, nstreams,
-               node_aware, coalesce, pack)
+               node_aware, coalesce, pack, chunk_bytes)
         progs = self._sched_cache.get(key)
         if progs is None:
             progs = [
@@ -231,7 +247,7 @@ class STStream:
                          resources=resources, merged=merged,
                          ordered=ordered, nstreams=nstreams,
                          node_aware=node_aware, coalesce=coalesce,
-                         pack=pack)
+                         pack=pack, chunk_bytes=chunk_bytes)
                 for seg in split_segments(self.program)]
             self._sched_cache[key] = progs
         return progs
@@ -241,13 +257,16 @@ class STStream:
                     resources: int = 64, merged: bool = True,
                     donate: bool = True, ordered: bool = False,
                     nstreams: int = 1, node_aware: bool = False,
-                    coalesce: bool = False, pack: bool = False):
+                    coalesce: bool = False, pack: bool = False,
+                    chunk_bytes: int = 0):
         """Execute the enqueued program; returns the new state.
 
         mode="st": one compiled program, single host sync (this call).
         mode="host": per-descriptor dispatch, blocking at epoch boundaries.
         ``pack`` materializes off-node aggregation groups as packed
-        multi-buffer put descriptors (schedule.pack_puts).
+        multi-buffer put descriptors (schedule.pack_puts);
+        ``chunk_bytes`` splits larger off-node puts into pipelined chunk
+        chains (schedule.chunk_puts).
         """
         if self.mesh is None:
             raise ValueError("cannot execute a device-free stream "
@@ -255,7 +274,7 @@ class STStream:
         for prog in self.scheduled_programs(
                 throttle=throttle, resources=resources, merged=merged,
                 ordered=ordered, nstreams=nstreams, node_aware=node_aware,
-                coalesce=coalesce, pack=pack):
+                coalesce=coalesce, pack=pack, chunk_bytes=chunk_bytes):
             if mode == "st":
                 state = backends.run_compiled(self, prog, state,
                                               donate=donate)

@@ -25,9 +25,25 @@ strictly costlier at every size — the paper's open off-node gap).
 Inter-node puts additionally SERIALIZE their injection on the rank's
 single NIC (``t_nic`` timeline): the NIC is busy for the put's beta
 term, so a burst of off-node puts drains one after another — the lever
-``schedule.node_aware_pass`` exploits by issuing them first. A put the
-pass marked ``aggregated`` (coalesced same-target-node group tail)
-rides the group head's message and pays no per-message alpha.
+``schedule.node_aware_pass`` exploits by issuing them first. Every real
+wire message pays its per-message alpha; the former simulator-only
+waiver for ``aggregated``-marked puts is gone — materialized packing
+(``schedule.pack_puts``) is the aggregation both executors can realize,
+so the marking is an ordering/bookkeeping hint with no cost effect.
+
+A CHUNKED put (``schedule.chunk_puts`` split a large payload into a
+pipelined chain) prices each chunk's beta on the NIC timeline, but only
+the FIRST chunk (``chunk_index == 0``) pays the per-message alpha: the
+tail chunks stream down the already-open wire path behind it, so the
+whole message completes at ``max(alpha + beta*chunk, beta*total)``-ish
+instead of ``alpha + beta*total`` — strictly earlier once the NIC is
+the bottleneck. Each chunk still pays its own ``t_issue`` dequeue.
+
+A MULTICAST put (one src payload, ``mcast_dirs`` branch fanout) prices
+as exactly ONE message — one injection of the payload's beta, one
+alpha, one chained completion (the switch replicates; the completion
+tree counts as one signal at the source) — versus one full message per
+branch for the equivalent unicast fanout.
 
 A PACKED multi-buffer descriptor (``schedule.pack_puts`` materialized a
 whole aggregation group into one node) is priced as exactly one
@@ -149,17 +165,21 @@ def simulate_program(prog: TriggeredProgram, cm: CostModel = None,
                     "packed descriptor's buffer lists must pair up")
             alpha, beta = cm.link_cost(node.link or "intra")
             xfer = beta * node.nbytes / 1024.0
+            # a tail chunk of a pipelined chain (chunk_puts) streams
+            # behind its head down the already-open wire path: it pays
+            # its own beta (and NIC injection) but no per-message alpha
+            tail_chunk = node.chunk_index > 0
             if node.link == "inter":
                 # the rank's single NIC injects off-node puts one after
                 # another: busy for the bandwidth (beta) term, then the
-                # wire alpha until the payload lands. An aggregated put
-                # (coalesced same-target-node group tail) rides the
-                # head's message: injection only, no per-message alpha.
+                # wire alpha until the payload lands. A multicast put
+                # injects its payload ONCE (the switch replicates the
+                # branches), so it prices identically to one unicast.
                 inject = max(start, t_nic)
                 t_nic = inject + xfer
-                end = t_nic + (0.0 if node.aggregated else alpha)
+                end = t_nic + (0.0 if tail_chunk else alpha)
             else:
-                end = start + alpha + xfer
+                end = start + xfer + (0.0 if tail_chunk else alpha)
             comp = end
             # offloaded: the issuing stream continues after dequeuing
             # the descriptor (t_issue) — issue ORDER therefore matters,

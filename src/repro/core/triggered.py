@@ -96,8 +96,27 @@ class TriggeredOp:
     #                                 from EVERY rank, the coalescing key
     #                                 for node_aware_pass aggregation
     aggregated: bool = False        # tail of a coalesced same-target-node
-    #                                 put group: rides the head's message,
-    #                                 so the simulator waives its alpha
+    #                                 put group (node_aware_pass marking —
+    #                                 an ordering/metadata hint; the cost
+    #                                 model prices every put's alpha since
+    #                                 pack_puts/chunk_puts materialize real
+    #                                 aggregation)
+    mcast_dirs: Tuple[Tuple[int, ...], ...] = ()   # multicast put: every
+    #                                 branch direction the ONE src payload
+    #                                 fans out over (dsts pairs up
+    #                                 per-branch); empty = unicast. One
+    #                                 descriptor, one completion tree
+    #                                 counted as ONE signal at the source.
+    # chunked-pipelined transport (schedule.chunk_puts): a put whose
+    # payload exceeds chunk_bytes is rewritten into a chain of chunk
+    # descriptors so pack(k+1)/wire(k)/unpack(k-1) overlap
+    chunk_index: int = 0            # position in the chunk chain (0 = head)
+    chunk_count: int = 1            # chunks of the logical put (1 = whole)
+    chunk_offset: int = 0           # element offset into the logical flat
+    #                                 payload (the packed concat for packed
+    #                                 puts) this chunk starts at
+    chunk_elems: int = 0            # element count of this chunk (0 = all)
+    chunk_head: int = -1            # op_id of chunk 0 (-1 = unchunked)
     expected_puts: int = -1         # wait nodes: put count of the epoch
     #                                 this wait joins, threaded from
     #                                 lowering so the simulator can refuse
@@ -141,7 +160,8 @@ class TriggeredOp:
                 tuple(self.direction) if self.direction else None,
                 self.role, self.slot, tuple(self.slots), self.fused,
                 self.wire, self.counter, deps, chained,
-                self.phase, self.stream)
+                self.phase, self.stream, self.mcast_dirs,
+                self.chunk_offset, self.chunk_elems, self.chunk_count)
 
 
 @dataclass
@@ -162,6 +182,17 @@ class TriggeredProgram:
         """Puts that are packed multi-buffer descriptors
         (schedule.pack_puts materialized an aggregation group)."""
         return [n for n in self.puts() if len(n.srcs) > 1]
+
+    def chunked_puts(self) -> List[TriggeredOp]:
+        """Chunk descriptors of pipelined puts (schedule.chunk_puts split
+        a large payload into a chain; every chunk — head and tails —
+        counts)."""
+        return [n for n in self.puts() if n.chunk_count > 1]
+
+    def multicast_puts(self) -> List[TriggeredOp]:
+        """One-to-many put descriptors (one src payload, many dst ranks,
+        one completion tree)."""
+        return [n for n in self.puts() if n.mcast_dirs]
 
     def epochs(self) -> int:
         return sum(1 for n in self.nodes if n.kind == "complete")
@@ -220,6 +251,11 @@ class TriggeredProgram:
             # message: put_buffers is what the UNPACKED schedule would
             # have issued, puts is what this schedule actually issues
             "packed_puts": len(packed),
+            # chunk descriptors of pipelined large puts / one-to-many
+            # multicast descriptors (0 on pre-chunking schedules)
+            "chunked_puts": len(self.chunked_puts()),
+            "multicast_puts": len(self.multicast_puts()),
+            "chunk_bytes": self.meta.get("chunk_bytes", 0),
             "put_buffers": sum(max(len(p.srcs), 1) for p in puts),
             "epochs": self.epochs(),
             "puts_per_epoch": len(puts) / epochs,

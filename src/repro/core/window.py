@@ -34,6 +34,11 @@ PACK = "__pack"     # staging-buffer label prefix of a packed multi-buffer
 #                     riding one collective. The staging buffer is a
 #                     TRACE-TIME value materialized by the executors (the
 #                     concat before the ppermute), never allocated state.
+CHUNK = "__chunk"   # staging-slice label prefix of a chunked-pipelined
+#                     put (schedule.chunk_puts): each chunk's payload is
+#                     a contiguous element slice of the put's logical
+#                     flat payload — like PACK, a trace-time value, never
+#                     allocated state.
 
 
 def is_counter_name(key: str) -> bool:
@@ -107,6 +112,11 @@ class STWindow:
         """Label of the staging buffer a packed put descriptor packs its
         ``nbuffers`` payloads into (one per (epoch, parity) group)."""
         return f"{self.name}.{PACK}{epoch}p{phase % 2}x{nbuffers}"
+
+    def chunk_staging(self, epoch: int, phase: int, nchunks: int) -> str:
+        """Label of the per-chunk staging slices a chunked put streams
+        its payload through (one chain per (epoch, parity) put)."""
+        return f"{self.name}.{CHUNK}{epoch}p{phase % 2}x{nchunks}"
 
     def allocate(self, num_ranks: int) -> Dict[str, jnp.ndarray]:
         """Materialize global buffers: (num_ranks, *local_shape)."""

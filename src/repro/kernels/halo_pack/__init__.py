@@ -1,4 +1,6 @@
 from repro.kernels.halo_pack.ops import halo_pack, halo_unpack
-from repro.kernels.halo_pack.ref import pack_flat, unpack_flat
+from repro.kernels.halo_pack.ref import (chunk_gather, chunk_scatter,
+                                         pack_flat, unpack_flat)
 
-__all__ = ["halo_pack", "halo_unpack", "pack_flat", "unpack_flat"]
+__all__ = ["halo_pack", "halo_unpack", "pack_flat", "unpack_flat",
+           "chunk_gather", "chunk_scatter"]

@@ -30,6 +30,50 @@ def unpack_flat(flat, like):
     return out
 
 
+def chunk_gather(parts, offset, count):
+    """Origin side of one CHUNK of a pipelined put (schedule.chunk_puts):
+    columns [offset, offset+count) of the per-rank flat concatenation of
+    ``parts`` (the same logical payload ``pack_flat`` stages, for packed
+    puts the whole group), gathered WITHOUT materializing the full
+    concat — each chunk touches only the buffers it overlaps, which is
+    what lets pack(k+1) trace independently of wire(k). Offsets are
+    static Python ints, so slicing stays trace-time."""
+    pieces, pos = [], 0
+    for p in parts:
+        f = p.reshape(p.shape[0], -1)
+        n = f.shape[1]
+        a, b = max(offset - pos, 0), min(offset + count - pos, n)
+        if a < b:
+            pieces.append(f[:, a:b])
+        pos += n
+    return (pieces[0] if len(pieces) == 1
+            else jnp.concatenate(pieces, axis=1))
+
+
+def chunk_scatter(arrived, dsts, offset, count):
+    """Target side of one chunk: write the arrived (R, count) slice back
+    into the overlapped region of each destination buffer's flat view;
+    returns the updated buffers (non-overlapped ones unchanged). The
+    union of a chain's chunks covers every destination element exactly
+    once, so a chunked schedule stays bit-identical to the monolithic
+    one — including the zero-fill non-receivers get on non-periodic
+    grids."""
+    out, pos, taken = [], 0, 0
+    for d in dsts:
+        r = d.shape[0]
+        n = int(d.size // r)
+        a, b = max(offset - pos, 0), min(offset + count - pos, n)
+        if a < b:
+            flat = d.reshape(r, n)
+            flat = flat.at[:, a:b].set(arrived[:, taken:taken + (b - a)])
+            out.append(flat.reshape(d.shape))
+            taken += b - a
+        else:
+            out.append(d)
+        pos += n
+    return out
+
+
 def halo_pack_ref(field, n):
     """field: (nx,ny,nz) -> flat (total,) merged surface buffer."""
     parts = []

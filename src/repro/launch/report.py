@@ -83,10 +83,10 @@ def st_stats_table(recs):
     existed (pre-overlap nstreams/double_buffer, pre-topology R/link
     fields) render with defaults instead of raising."""
     rows = ["| name | pattern | mode | throttle | R | streams | dbuf | "
-            "node-aware | packed | us/iter | derived | puts/epoch | "
-            "inter | hwm | crit depth | dep edges |",
+            "node-aware | packed | chunks | mcast | us/iter | derived | "
+            "puts/epoch | inter | hwm | crit depth | dep edges |",
             "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"
-            "---|---|"]
+            "---|---|---|---|"]
     for r in recs:
         if "stats" not in r:
             continue
@@ -95,9 +95,11 @@ def st_stats_table(recs):
         nstreams = r.get("nstreams") or s.get("nstreams", 1)
         dbuf = r.get("double_buffer", s.get("double_buffer", False))
         node_aware = r.get("node_aware", s.get("node_aware", False))
-        # packed multi-buffer descriptors per program (0 for records
-        # predating materialized aggregation)
+        # packed / chunked / multicast descriptor counts per program
+        # (0 for records predating each feature)
         packed = s.get("packed_puts", 0)
+        chunks = s.get("chunked_puts", 0)
+        mcast = s.get("multicast_puts", 0)
         # an unbounded policy (none/application) holds no slots: its
         # record carries resources=None and renders as "—"
         res = r.get("resources", s.get("resources"))
@@ -105,7 +107,7 @@ def st_stats_table(recs):
             f"| {r.get('name', '?')} | {pattern} | {r.get('mode', '-')} | "
             f"{r.get('throttle', '-')} | {_num(res, 'd')} | {nstreams} | "
             f"{'y' if dbuf else 'n'} | {'y' if node_aware else 'n'} | "
-            f"{packed} | "
+            f"{packed} | {chunks} | {mcast} | "
             f"{_num(r.get('us_per_iter'), '.1f')} | "
             f"{_num(r.get('derived_us_per_iter'), '.2f')} | "
             f"{_num(s.get('puts_per_epoch'), '.0f')} | "

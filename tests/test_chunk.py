@@ -1,0 +1,471 @@
+"""Chunked-pipelined transport (schedule.chunk_puts) + multicast put
+descriptors + the broadcast pattern:
+
+  * chain structure: an off-node put larger than ``chunk_bytes``
+    becomes a chain of chunk descriptors — the head keeps its op_id
+    (chunk 0), tails carry contiguous element slices whose union covers
+    the payload exactly once, each chunk owns its chained completion
+    signal, and wait.expected_puts recounts per chunk,
+  * dependency widening: an edge naming a chunked put means "payload
+    fully delivered" and is widened with the tail op_ids; chunks of ONE
+    chain carry no edges on each other (the NIC injection timeline
+    keeps them ordered — serializing would forfeit the pipelining),
+  * composition with pack_puts (hypothesis, degrading to the
+    example-based shim): a packed descriptor chunks over the staging
+    concat of its whole group, chunk boundaries always tile [0, total),
+  * on-node ("intra") puts and single-node topologies never chunk,
+  * the per-message alpha waiver for coalesce-MARKED aggregation is
+    GONE from the simulator: the aggregated flag is ordering metadata
+    with zero cost effect (materialized pack/chunk descriptors are the
+    honest replacement),
+  * derived cost: chunked <= monolithic above chunk_bytes on the
+    NIC-bound patterns (ring, broadcast) — strictly below at the large
+    points — while a2a documents the real tradeoff (per-chunk
+    completion signals can outweigh the hidden alpha),
+  * multicast: ONE descriptor with a completion tree (one signal at the
+    source, one slot bump per branch) vs the cols-1 unicast fanout, and
+    the multicast program derives strictly cheaper,
+  * executor equivalence: chunked vs monolithic bit-identical through
+    run_compiled AND run_host for faces/ring/a2a/broadcast, and
+    multicast vs unicast fanout bit-identical (multi-device, in a
+    subprocess).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # degrade to example-based sweeps
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import (CostModel, chunk_puts, pattern_programs,
+                        simulate_pattern, simulate_program)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SIZE_KW = {"faces": dict(n=(4, 4, 4))}
+GRID = {"faces": (2, 2, 2), "ring": (4,), "a2a": (4,),
+        "broadcast": (2, 4)}
+RPN = {"faces": 4, "ring": 2, "a2a": 2, "broadcast": 2}   # two nodes each
+
+
+def _prog(pat, niter=2, **kw):
+    kw = dict(SIZE_KW.get(pat, {}), grid=GRID[pat], **kw)
+    progs = pattern_programs(pat, niter, **kw)
+    assert len(progs) == 1
+    return progs[0]
+
+
+# ---------------------------------------------------------------------------
+# chain structure
+# ---------------------------------------------------------------------------
+
+def test_ring_put_chunks_into_contiguous_chain():
+    """seq_per_rank=32 K put = 1*32*2*8*4B = 2048B; chunk_bytes=512
+    -> 4 chunks of 128 elements each."""
+    prog = _prog("ring", throttle="none", ranks_per_node=RPN["ring"],
+                 chunk_bytes=512, seq_per_rank=32)
+    chains = {}
+    for p in prog.puts():
+        assert p.chunk_count > 1, p.label
+        chains.setdefault(p.chunk_head, []).append(p)
+    assert chains
+    for head_id, chunks in chains.items():
+        chunks.sort(key=lambda c: c.chunk_index)
+        head = chunks[0]
+        assert head.op_id == head_id and head.chunk_index == 0
+        assert [c.chunk_index for c in chunks] == list(range(len(chunks)))
+        # contiguous tiling of the flat payload
+        pos = 0
+        for c in chunks:
+            assert c.chunk_offset == pos
+            assert c.chunk_elems > 0
+            pos += c.chunk_elems
+        import numpy as np
+        itemsize = np.dtype(head.dtype).itemsize
+        assert sum(c.nbytes for c in chunks) == pos * itemsize
+        # every chunk owns its completion signal and transport fields
+        for c in chunks:
+            assert c.chained is not None
+            assert c.chained.counter == head.chained.counter
+            assert c.src == head.src and c.dst == head.dst
+            assert c.direction == head.direction
+        # no intra-chain dependency edges (pipelining, not a lockstep)
+        ids = {c.op_id for c in chunks}
+        for c in chunks:
+            assert not (ids & set(c.deps))
+
+
+def test_wait_expected_puts_recounted_per_chunk():
+    mono = _prog("ring", throttle="none", ranks_per_node=RPN["ring"],
+                 seq_per_rank=32)
+    prog = _prog("ring", throttle="none", ranks_per_node=RPN["ring"],
+                 chunk_bytes=512, seq_per_rank=32)
+    waits = [n for n in prog.nodes if n.kind == "wait"
+             and n.expected_puts >= 0]
+    base = [n for n in mono.nodes if n.kind == "wait"
+            and n.expected_puts >= 0]
+    assert waits and len(waits) == len(base)
+    assert all(w.expected_puts > b.expected_puts
+               for w, b in zip(waits, base))
+    # and the simulator's completion accounting passes on the chunked DAG
+    assert simulate_program(prog, CostModel()) > 0
+
+
+def test_dependency_edges_widen_to_all_chunks():
+    """P2P ordering places put -> put edges BEFORE chunk_puts runs (the
+    pass order is ordering -> pack -> chunk -> throttle), so any edge
+    naming a chunked put must widen to the WHOLE chain — depending on a
+    put means "payload fully delivered". Edges placed AFTER chunking
+    (throttling) name individual chunk descriptors and need no
+    widening."""
+    prog = _prog("ring", niter=4, throttle="none", ordered=True,
+                 ranks_per_node=RPN["ring"], chunk_bytes=512,
+                 seq_per_rank=32)
+    known = {n.op_id for n in prog.nodes}
+    chains = {}
+    for p in prog.puts():
+        chains.setdefault(p.chunk_head, set()).add(p.op_id)
+    widened = 0
+    for n in prog.nodes:
+        deps = set(n.deps)
+        assert deps <= known
+        for head, members in chains.items():
+            if head in deps and n.op_id not in members:
+                assert members <= deps, \
+                    (n.label, "edge names a chunk head but not its tails")
+                widened += 1
+    assert widened, "no dependency edge ever named a chunked put"
+    assert simulate_program(prog, CostModel()) > 0
+    # throttle edges land on the already-chunked DAG and stay valid too
+    thr = _prog("ring", niter=4, throttle="adaptive", resources=2,
+                ranks_per_node=RPN["ring"], chunk_bytes=512,
+                seq_per_rank=32)
+    ids = {n.op_id for n in thr.nodes}
+    assert any(p.deps for p in thr.puts())
+    assert all(d in ids for p in thr.puts() for d in p.deps)
+    assert simulate_program(thr, CostModel()) > 0
+
+
+def test_chunk_meta_and_stats():
+    prog = _prog("ring", throttle="none", ranks_per_node=RPN["ring"],
+                 chunk_bytes=512, seq_per_rank=32)
+    s = prog.stats()
+    assert s["chunk_bytes"] == 512
+    assert s["chunked_puts"] == len(prog.chunked_puts()) > 0
+    groups = prog.meta["chunked_groups"]
+    assert groups
+    for g in groups:
+        assert g["chunks"] > 1 and len(g["members"]) == g["chunks"]
+        assert "__chunk" in g["staging"]
+
+
+# ---------------------------------------------------------------------------
+# identity cases
+# ---------------------------------------------------------------------------
+
+def test_small_payloads_and_intra_links_never_chunk():
+    # payload below the threshold: identity
+    prog = _prog("ring", throttle="none", ranks_per_node=RPN["ring"],
+                 chunk_bytes=1 << 20)
+    assert prog.meta["chunk_bytes"] == 1 << 20
+    assert not prog.chunked_puts()
+    # single-node topology (all-intra): identity at any threshold
+    for pat in ("faces", "ring", "a2a", "broadcast"):
+        prog = _prog(pat, throttle="none", chunk_bytes=8)
+        assert not prog.chunked_puts(), pat
+        base = _prog(pat, throttle="none")
+        assert [n.kind for n in prog.nodes] == [n.kind for n in base.nodes]
+
+
+def test_chunk_disabled_is_identity():
+    prog = _prog("ring", throttle="none", ranks_per_node=RPN["ring"])
+    assert prog.meta["chunk_bytes"] == 0
+    assert not prog.chunked_puts()
+
+
+# ---------------------------------------------------------------------------
+# composition with pack_puts (property)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seq=st.sampled_from([8, 16, 32, 64]),
+       chunk_bytes=st.sampled_from([64, 256, 512, 1024, 4096]))
+def test_chunk_composes_with_pack(seq, chunk_bytes):
+    """chunk_puts runs AFTER pack_puts: the packed K,V descriptor chunks
+    over its staging concat — boundaries tile [0, total) regardless of
+    where the member buffers meet, and the chain inherits the packed
+    srcs/dsts tuples unchanged."""
+    import numpy as np
+    prog = _prog("ring", throttle="none", ranks_per_node=RPN["ring"],
+                 pack=True, chunk_bytes=chunk_bytes, seq_per_rank=seq)
+    packed_bytes = 2 * seq * 2 * 8 * 4          # K+V staging concat
+    chains = {}
+    for p in prog.puts():
+        assert p.srcs == ("ring.k", "ring.v")   # pack happened first
+        chains.setdefault(p.chunk_head if p.chunk_count > 1 else p.op_id,
+                          []).append(p)
+    for chunks in chains.values():
+        chunks.sort(key=lambda c: c.chunk_index)
+        itemsize = np.dtype(chunks[0].dtype).itemsize
+        if packed_bytes <= chunk_bytes:
+            assert len(chunks) == 1 and chunks[0].chunk_count == 1
+            continue
+        per = max(1, chunk_bytes // itemsize)
+        assert len(chunks) == -(-(packed_bytes // itemsize) // per)
+        pos = 0
+        for c in chunks:
+            assert c.chunk_offset == pos
+            pos += c.chunk_elems
+        assert pos * itemsize == packed_bytes
+    assert simulate_program(prog, CostModel()) > 0
+
+
+# ---------------------------------------------------------------------------
+# the coalesce alpha waiver is gone (simulator honesty)
+# ---------------------------------------------------------------------------
+
+def test_aggregated_marking_has_no_cost_effect():
+    """The simulator-only free-alpha waiver for coalesce-marked puts is
+    removed: flipping the aggregated flag on every put changes NOTHING
+    in the derived cost. Aggregation only pays off when MATERIALIZED
+    (pack_puts / chunk_puts descriptors)."""
+    prog = _prog("faces", throttle="none", ranks_per_node=RPN["faces"])
+    base = simulate_program(prog, CostModel())
+    for p in prog.puts():
+        p.aggregated = True
+    assert simulate_program(prog, CostModel()) == base
+
+
+# ---------------------------------------------------------------------------
+# derived cost
+# ---------------------------------------------------------------------------
+
+def test_chunked_not_worse_on_nic_bound_patterns():
+    """Above chunk_bytes on a multi-node mapping, the chunked schedule
+    never derives worse on the NIC-bound patterns — and is strictly
+    better at the large-message points, where per-chunk injection hides
+    the alpha a monolithic put serializes. R=16 so the chain fits the
+    descriptor slots: a chain longer than R throttles against itself,
+    which is the throttling story, not the pipelining one."""
+    cases = [("ring", dict(seq_per_rank=32), False),
+             ("ring", dict(seq_per_rank=64), True),
+             ("ring", dict(seq_per_rank=128), True),
+             ("broadcast", dict(tile=32), True),
+             ("broadcast", dict(tile=48), True)]
+    for pat, kw, strict in cases:
+        mono = simulate_pattern(pat, 4, grid=GRID[pat], resources=16,
+                                ranks_per_node=RPN[pat], **kw)
+        chunked = simulate_pattern(pat, 4, grid=GRID[pat], resources=16,
+                                   ranks_per_node=RPN[pat],
+                                   chunk_bytes=1024, **kw)
+        assert 0 < chunked <= mono + 1e-9, (pat, kw, chunked, mono)
+        if strict:
+            assert chunked < mono - 1e-9, (pat, kw, chunked, mono)
+
+
+def test_chunking_is_not_free_everywhere():
+    """Honesty check: chunking pays per-chunk issue + completion-signal
+    costs, so on a2a (many small logical messages, completion-heavy) it
+    can LOSE — the schedule pass must make it expressible, not
+    universally apply it. Guards against 'optimizations' that only ever
+    help by construction of the cost model."""
+    mono = simulate_pattern("a2a", 4, grid=GRID["a2a"], resources=8,
+                            ranks_per_node=RPN["a2a"], seq=128)
+    chunked = simulate_pattern("a2a", 4, grid=GRID["a2a"], resources=8,
+                               ranks_per_node=RPN["a2a"], seq=128,
+                               chunk_bytes=1024)
+    assert chunked > mono, "a2a tradeoff vanished — update the bench " \
+        "chunk section's strict point list if this is intentional"
+
+
+def test_chunked_program_simulates_with_streams_and_double_buffer():
+    for pat in ("ring", "broadcast"):
+        chunked = simulate_pattern(pat, 3, policy="adaptive", resources=8,
+                                   grid=GRID[pat], ranks_per_node=RPN[pat],
+                                   nstreams=2, double_buffer=True,
+                                   chunk_bytes=1024,
+                                   **({"seq_per_rank": 64}
+                                      if pat == "ring" else {"tile": 32}))
+        mono = simulate_pattern(pat, 3, policy="adaptive", resources=8,
+                                grid=GRID[pat], ranks_per_node=RPN[pat],
+                                nstreams=2, double_buffer=True,
+                                **({"seq_per_rank": 64}
+                                   if pat == "ring" else {"tile": 32}))
+        assert 0 < chunked <= mono + 1e-9, (pat, chunked, mono)
+
+
+# ---------------------------------------------------------------------------
+# multicast descriptors + the broadcast pattern
+# ---------------------------------------------------------------------------
+
+def test_broadcast_multicast_is_one_descriptor_per_epoch():
+    rows, cols = GRID["broadcast"]
+    prog = _prog("broadcast", throttle="none",
+                 ranks_per_node=RPN["broadcast"])
+    by_epoch = {}
+    for p in prog.puts():
+        by_epoch.setdefault(p.epoch, []).append(p)
+    assert by_epoch
+    for puts in by_epoch.values():
+        assert len(puts) == 1
+        (p,) = puts
+        assert p.mcast_dirs == tuple((0, k) for k in range(1, cols))
+        assert len(p.dsts) == cols - 1
+        assert p.chained is not None and p.chained.fused
+        assert len(p.chained.slots) == cols - 1
+    ucast = _prog("broadcast", throttle="none",
+                  ranks_per_node=RPN["broadcast"], multicast=False)
+    per_epoch = {}
+    for p in ucast.puts():
+        per_epoch.setdefault(p.epoch, []).append(p)
+    assert all(len(v) == cols - 1 for v in per_epoch.values())
+    assert not ucast.multicast_puts()
+    # the descriptor economy the stats() report shows
+    assert prog.stats()["multicast_puts"] == len(by_epoch)
+    assert prog.stats()["puts_per_epoch"] == 1.0
+
+
+def test_multicast_derives_cheaper_than_unicast_fanout():
+    for tile in (8, 32):
+        m = simulate_pattern("broadcast", 4, grid=GRID["broadcast"],
+                             resources=8, ranks_per_node=RPN["broadcast"],
+                             tile=tile, multicast=True)
+        u = simulate_pattern("broadcast", 4, grid=GRID["broadcast"],
+                             resources=8, ranks_per_node=RPN["broadcast"],
+                             tile=tile, multicast=False)
+        assert 0 < m < u - 1e-9, (tile, m, u)
+
+
+def test_multicast_chunks_like_any_inter_put():
+    """chunk_puts applies to a multicast descriptor too: every chunk
+    keeps the full branch set (dsts + mcast_dirs) over its slice."""
+    prog = _prog("broadcast", throttle="none",
+                 ranks_per_node=RPN["broadcast"], chunk_bytes=1024,
+                 tile=32)
+    chunked = prog.chunked_puts()
+    assert chunked
+    for c in chunked:
+        assert c.mcast_dirs and len(c.dsts) == GRID["broadcast"][1] - 1
+        assert c.chained is not None and len(c.chained.slots) == \
+            len(c.mcast_dirs)
+
+
+def test_multicast_never_packs():
+    """pack_puts must not merge a multicast descriptor into a unicast
+    group (and has nothing to pack on the broadcast pattern: packing
+    keys on the rank permutation, each mcast rides its own)."""
+    prog = _prog("broadcast", throttle="none",
+                 ranks_per_node=RPN["broadcast"], pack=True)
+    assert not prog.packed_puts()
+    assert all(len(p.srcs) <= 1 for p in prog.puts())
+
+
+def test_chunk_puts_direct_call_matches_schedule_path():
+    """The exported pass is the one schedule() runs: calling it directly
+    on an unchunked program reproduces the scheduled chunk structure."""
+    base = _prog("ring", throttle="none", ranks_per_node=RPN["ring"],
+                 seq_per_rank=32)
+    direct = chunk_puts(base, 512)
+    via = _prog("ring", throttle="none", ranks_per_node=RPN["ring"],
+                chunk_bytes=512, seq_per_rank=32)
+    assert ([(p.chunk_index, p.chunk_offset, p.chunk_elems, p.nbytes)
+             for p in direct.puts()]
+            == [(p.chunk_index, p.chunk_offset, p.chunk_elems, p.nbytes)
+                for p in via.puts()])
+
+
+# ---------------------------------------------------------------------------
+# executor equivalence (multi-device, subprocess)
+# ---------------------------------------------------------------------------
+
+EQUIV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    from repro.core import STStream, get_pattern
+    from repro.launch.mesh import make_mesh
+
+    CASES = [
+        ("faces", (2, 2, 2), ("x", "y", "z"), 4, 16,
+         dict(n=(3, 3, 3)), ["acc", "res", "src", "it"], ["src"]),
+        ("ring", (4,), ("data",), 2, 64,
+         dict(batch=1, seq_per_rank=4, heads=2, head_dim=8), ["out"],
+         ["q", "k", "v"]),
+        ("a2a", (4,), ("model",), 2, 64,
+         dict(batch=1, seq=8, d_model=16, expert_ff=16, experts=8,
+              top_k=2), ["out", "aux"],
+         ["x", "router", "wg", "wu", "wd"]),
+        ("broadcast", (2, 4), ("row", "col"), 2, 64,
+         dict(tile=8), ["ctile", "it"], ["abase", "b"]),
+    ]
+    niter = 2
+    def run(pat, mesh, axes, rpn, kw, seeds, outputs, mode, chunk_bytes,
+            **extra):
+        stream = STStream(mesh, axes)
+        win, _ = pat.build(stream, niter, merged=True,
+                           ranks_per_node=rpn, **kw, **extra)
+        state = stream.allocate()
+        rng = np.random.RandomState(0)
+        for b in seeds:
+            k = win.qual(b)
+            val = rng.rand(*state[k].shape).astype(
+                np.asarray(state[k]).dtype) * 0.3
+            state[k] = jax.device_put(val, state[k].sharding)
+        state = stream.synchronize(state, mode=mode, throttle="adaptive",
+                                   resources=8, donate=False,
+                                   node_aware=True,
+                                   chunk_bytes=chunk_bytes)
+        if chunk_bytes:
+            progs = stream.scheduled_programs(
+                throttle="adaptive", resources=8, node_aware=True,
+                chunk_bytes=chunk_bytes)
+            assert progs[0].chunked_puts(), (pat.name, "no chunking")
+        return {b: np.asarray(state[win.qual(b)]) for b in outputs}
+
+    for pat_name, grid, axes, rpn, cb, kw, outputs, seeds in CASES:
+        pat = get_pattern(pat_name)
+        mesh = make_mesh(grid, axes)
+        for mode in ("st", "host"):
+            ref = run(pat, mesh, axes, rpn, kw, seeds, outputs, mode, 0)
+            got = run(pat, mesh, axes, rpn, kw, seeds, outputs, mode, cb)
+            for b in outputs:
+                assert (got[b] == ref[b]).all(), \\
+                    (pat_name, mode, b, np.abs(got[b] - ref[b]).max())
+                assert np.asarray(got[b]).any(), (pat_name, b, "vacuous")
+            print(f"OK chunk {pat_name}_{mode}")
+
+    pat = get_pattern("broadcast")
+    mesh = make_mesh((2, 4), ("row", "col"))
+    A = dict(tile=8)
+    for mode in ("st", "host"):
+        u = run(pat, mesh, ("row", "col"), 2, A, ["abase", "b"],
+                ["ctile", "it"], mode, 0, multicast=False)
+        m = run(pat, mesh, ("row", "col"), 2, A, ["abase", "b"],
+                ["ctile", "it"], mode, 0, multicast=True)
+        mc = run(pat, mesh, ("row", "col"), 2, A, ["abase", "b"],
+                 ["ctile", "it"], mode, 64, multicast=True)
+        for b in ("ctile", "it"):
+            assert (m[b] == u[b]).all(), (mode, b)
+            assert (mc[b] == u[b]).all(), (mode, b, "chunked mcast")
+            assert np.asarray(m[b]).any()
+        print(f"OK mcast {mode}")
+""")
+
+
+@pytest.mark.slow
+def test_chunked_and_multicast_bit_identical_both_executors():
+    """Acceptance: the chunked schedule is bit-identical to the
+    monolithic one through run_compiled AND run_host for every pattern,
+    and the multicast broadcast program (plain and chunked) is
+    bit-identical to its unicast fanout."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run([sys.executable, "-c", EQUIV_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert r.stdout.count("OK chunk") == 8
+    assert r.stdout.count("OK mcast") == 2
