@@ -147,6 +147,19 @@ def main():
     ap.add_argument("--verify_multicast", type=int, default=0,
                     help="also run the unicast-fanout program and "
                          "require bit-identical pattern outputs")
+    ap.add_argument("--config", default="",
+                    help="tuned schedule config: 'auto' consults the "
+                         "tuned cache (autotuning on a miss) under the "
+                         "(pattern, grid, ranks_per_node, b<block>) key; "
+                         "or a ScheduleConfig JSON object. Overrides the "
+                         "individual schedule flags AND the build-time "
+                         "double_buffer/multicast knobs")
+    ap.add_argument("--tuned", default="",
+                    help="tuned-cache path for --config auto (default: "
+                         "$REPRO_TUNED or results/tuned.json)")
+    ap.add_argument("--verify_tuned", type=int, default=0,
+                    help="also run the flag-default schedule and require "
+                         "bit-identical pattern outputs vs the tuned one")
     ap.add_argument("--name", default=None)
     ap.add_argument("--json-dir", default=None,
                     help="also write a {name}.json record (descriptor "
@@ -173,16 +186,41 @@ def main():
 
     double_buffer = bool(args.double_buffer)
     ranks_per_node = args.ranks_per_node or None
+    build_kw = build_kwargs(args, ndev)
+    cfg = None
+    if args.config:
+        # resolve BEFORE building: double_buffer and multicast are
+        # build-time knobs — a tuned config can change the enqueued
+        # program itself, not just the schedule passes
+        from repro.core.autotune import resolve_config
+        spec = args.config if args.config == "auto" \
+            else json.loads(args.config)
+        cfg = resolve_config(spec, args.pattern, grid=grid,
+                             ranks_per_node=ranks_per_node,
+                             size=f"b{args.block}",
+                             path=args.tuned or None, **build_kw)
+        double_buffer = cfg.double_buffer
+        build_kw = dict(build_kw,
+                        **{k: v for k, v in cfg.build_overrides().items()
+                           if k != "double_buffer"})
     stream = STStream(mesh, pat.grid_axes)
-    win, _ = pat.build(stream, args.niter, merged=bool(args.merged),
+    win, _ = pat.build(stream, args.niter,
+                       merged=(cfg.merged if cfg else bool(args.merged)),
                        double_buffer=double_buffer,
-                       ranks_per_node=ranks_per_node,
-                       **build_kwargs(args, ndev))
+                       ranks_per_node=ranks_per_node, **build_kw)
     state = stream.allocate()
 
-    throttle = args.throttle
-    merged = bool(args.merged)
-    nstreams = args.nstreams
+    if cfg is not None:
+        sched_opts = cfg.sched_kwargs()
+    else:
+        sched_opts = dict(throttle=args.throttle, resources=args.resources,
+                          merged=bool(args.merged),
+                          ordered=bool(args.ordered),
+                          nstreams=args.nstreams,
+                          node_aware=bool(args.node_aware),
+                          coalesce=bool(args.coalesce),
+                          pack=bool(args.pack),
+                          chunk_bytes=args.chunk_bytes)
     if args.mode == "host":
         # the host baseline has no runtime throttling engine — its
         # resource reclaim is the blocking per-op dispatch itself.
@@ -192,14 +230,10 @@ def main():
         # ST-side contribution: the standard active-RMA baseline posts
         # per-neighbor signals and wire completions. It also has no
         # device streams: every dispatch serializes on the host.
-        throttle = "none"
-        merged = False
-        nstreams = 1
-    sched_opts = dict(throttle=throttle, resources=args.resources,
-                      merged=merged, ordered=bool(args.ordered),
-                      nstreams=nstreams, node_aware=bool(args.node_aware),
-                      coalesce=bool(args.coalesce), pack=bool(args.pack),
-                      chunk_bytes=args.chunk_bytes)
+        sched_opts.update(throttle="none", merged=False, nstreams=1)
+    throttle = sched_opts["throttle"]
+    merged = sched_opts["merged"]
+    nstreams = sched_opts["nstreams"]
 
     def run_once(st):
         return stream.synchronize(st, mode=args.mode, donate=False,
@@ -331,6 +365,41 @@ def main():
         print(f"# multicast-verified {args.pattern} "
               f"outputs={VERIFY_OUTPUTS[args.pattern]}")
 
+    if args.verify_tuned:
+        # the tuned schedule (whatever point the autotuner picked —
+        # possibly a different BUILD: double-buffered windows, multicast
+        # vs unicast fanout) must not change a single output bit vs the
+        # flag-default schedule: tuning is a pure performance choice
+        if cfg is None:
+            sys.exit("--verify_tuned needs --config (auto or an explicit "
+                     "ScheduleConfig JSON)")
+        got_state = stream.synchronize(
+            seeded_state(stream, win, args.pattern, 4), mode=args.mode,
+            donate=False, **sched_opts)
+        ref_stream = STStream(mesh, pat.grid_axes)
+        ref_win, _ = pat.build(ref_stream, args.niter,
+                               merged=bool(args.merged),
+                               double_buffer=bool(args.double_buffer),
+                               ranks_per_node=ranks_per_node,
+                               **build_kwargs(args, ndev))
+        ref_opts = dict(throttle=args.throttle, resources=args.resources,
+                        merged=bool(args.merged),
+                        ordered=bool(args.ordered),
+                        nstreams=args.nstreams,
+                        node_aware=bool(args.node_aware),
+                        coalesce=bool(args.coalesce),
+                        pack=bool(args.pack),
+                        chunk_bytes=args.chunk_bytes)
+        if args.mode == "host":
+            ref_opts.update(throttle="none", merged=False, nstreams=1)
+        ref_state = ref_stream.synchronize(
+            seeded_state(ref_stream, ref_win, args.pattern, 4),
+            mode=args.mode, donate=False, **ref_opts)
+        verify_outputs(args.pattern, "tuned", got_state, win,
+                       ref_state, ref_win)
+        print(f"# tuned-verified {args.pattern} config={cfg.label()} "
+              f"mode={args.mode} outputs={VERIFY_OUTPUTS[args.pattern]}")
+
     stats = progs[0].stats()
     stats["segments"] = len(progs)
     name = args.name or (f"{args.pattern}_{args.mode}_{throttle}"
@@ -353,6 +422,8 @@ def main():
                    us_per_iter=us_per_iter, derived_us_per_iter=derived,
                    double_buffer=double_buffer,
                    ranks_per_node=ranks_per_node, **sched_opts, stats=stats)
+        if cfg is not None:
+            rec["config"] = cfg.to_dict()
         # an unbounded policy holds no descriptor slots: report the real
         # (None) R from program meta, not the CLI default
         rec["resources"] = progs[0].meta.get("resources")

@@ -16,6 +16,17 @@ the current run just produced and fails on regressions:
     go as the repo grows);
   * a missing OLD record passes with a note (first run of a new id).
 
+Tuned-config rows (the ``autotune`` section's
+``autotune_<pattern>_<size>_{tuned,default}`` pairs) gate exactly like
+every other row — the same >threshold + abs-eps rule across consecutive
+records — and are additionally listed in their own summary block so a
+tuned-schedule drift is readable at a glance. When the two records were
+priced under DIFFERENT calibration constants (the ``calibration`` field
+``benchmarks/run.py`` stamps from ``results/calibration.json``), a
+warning is printed: every derived column rebaselines under new
+constants, so cross-record diffs move together and a ``--waive`` may be
+the intended response.
+
 Exit status: 0 clean / 1 regressions found / 2 usage or parse error.
 """
 from __future__ import annotations
@@ -87,8 +98,8 @@ def main(argv=None):
               "nothing to diff, passing")
         return 0
     try:
-        old, _ = load_derived(args.old)
-        new, _ = load_derived(args.new)
+        old, old_rec = load_derived(args.old)
+        new, new_rec = load_derived(args.new)
     except (OSError, ValueError, KeyError) as e:
         print(f"trajectory: cannot parse records: {e}", file=sys.stderr)
         return 2
@@ -98,6 +109,21 @@ def main(argv=None):
 
     print(f"trajectory: {len(set(old) & set(new))} matching rows, "
           f"{len(added)} added, {len(removed)} removed")
+    ocal = old_rec.get("calibration")
+    ncal = new_rec.get("calibration")
+    if ocal != ncal:
+        print("trajectory: WARNING — records were priced under "
+              f"DIFFERENT calibration constants "
+              f"(old={'seed' if ocal is None else 'measured'}, "
+              f"new={'seed' if ncal is None else 'measured'}): every "
+              "derived column rebaselines; if diffs below move "
+              "together, --waive is the intended response")
+    tuned_rows = sorted(n for n in set(old) & set(new)
+                        if re.match(r"autotune_.*_(tuned|default)$", n))
+    if tuned_rows:
+        print("trajectory: tuned-config rows (gated like all rows):")
+        for name in tuned_rows:
+            print(f"    {name}: {old[name]:.2f} -> {new[name]:.2f}")
     for name, o, n in improvements:
         print(f"  ok       {name}: {o:.2f} -> {n:.2f}")
     if added:

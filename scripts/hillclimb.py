@@ -1,63 +1,111 @@
-"""Hillclimb runner: re-runs a dry-run cell with a candidate change and
-records before/after roofline terms to results/perf/<tag>.json.
+"""Hillclimb runner — a thin CLI over ``schedule.autotune``: search the
+schedule configuration space for one (pattern, topology, message size)
+point, print the ranked leaderboard, record the run to
+``results/perf/<pattern>__<tag>.json``, and save the winner into the
+tuned cache that ``--config auto`` consults.
 
-  PYTHONPATH=src python scripts/hillclimb.py --arch deepseek-v2-236b \\
-      --shape train_4k --tag moe_a2a --moe-impl a2a
-  PYTHONPATH=src python scripts/hillclimb.py --arch qwen3-32b \\
-      --shape train_4k --tag seqshard_off --cfg '{"seq_shard_activations": false}'
-  PYTHONPATH=src python scripts/hillclimb.py --arch llama-3.2-vision-90b \\
-      --shape decode_32k --tag kvseq_data --overrides '{"kv_seq": "data"}'
+  PYTHONPATH=src python scripts/hillclimb.py --pattern faces \\
+      --grid 2,2,2 --ranks-per-node 4 --block 4 --tag rpn4
+  PYTHONPATH=src python scripts/hillclimb.py --pattern broadcast \\
+      --grid 2,4 --ranks-per-node 2 --block 16 --full --top 20
+  PYTHONPATH=src python scripts/hillclimb.py --pattern ring --grid 4 \\
+      --ranks-per-node 2 --block 64 --calibration results/calibration.json
+
+With ``--calibration`` the candidates are scored under the MEASURED
+alpha-beta constants (``python -m repro.core.calibrate`` fits them);
+the default is the seed cost model, matching the benchmark trajectory
+rows. ``--full`` searches the untruncated space (the weekly CI job's
+mode); ``--no-save`` skips writing the tuned cache.
 """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 import argparse
-import dataclasses
 import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+
+def _size_kwargs(pattern, block):
+    """The same --block -> builder-kwarg mapping the bench worker uses,
+    so the tuned-cache key b<block> names the identical program."""
+    return {"faces": dict(n=(block,) * 3),
+            "ring": dict(seq_per_rank=block),
+            "a2a": dict(seq=block),
+            "broadcast": dict(tile=block)}[pattern]
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
-    ap.add_argument("--tag", required=True)
-    ap.add_argument("--moe-impl", default="gshard")
-    ap.add_argument("--overrides", default=None)
-    ap.add_argument("--cfg", default=None,
-                    help="JSON dict of ModelConfig field replacements")
-    ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--out", default="results/perf")
+    ap = argparse.ArgumentParser(
+        description="search the schedule config space for one "
+                    "(pattern, topology, size) point")
+    ap.add_argument("--pattern", required=True,
+                    choices=["faces", "ring", "a2a", "broadcast"])
+    ap.add_argument("--grid", default=None,
+                    help="process grid, e.g. 2,2,2 (default: the "
+                         "pattern's registry default)")
+    ap.add_argument("--ranks-per-node", type=int, default=0,
+                    help="hardware node mapping (0 = single node)")
+    ap.add_argument("--block", type=int, default=8,
+                    help="message size knob (faces: block edge; ring: "
+                         "seq per rank; a2a: seq; broadcast: tile)")
+    ap.add_argument("--niter", type=int, default=2)
+    ap.add_argument("--full", action="store_true",
+                    help="untruncated search space")
+    ap.add_argument("--top", type=int, default=10,
+                    help="leaderboard rows to print")
+    ap.add_argument("--tag", default=None,
+                    help="results/perf record tag (default: "
+                         "b<block>_rpn<n>)")
+    ap.add_argument("--out", default=os.path.join(ROOT, "results", "perf"))
+    ap.add_argument("--calibration", default=None,
+                    help="score under the measured constants in this "
+                         "calibration record instead of the seed model")
+    ap.add_argument("--tuned", default=None,
+                    help="tuned-cache path to save the winner into "
+                         "(default: $REPRO_TUNED or results/tuned.json)")
+    ap.add_argument("--no-save", action="store_true",
+                    help="do not write the winner into the tuned cache")
     args = ap.parse_args()
 
-    from repro.launch.dryrun_lib import run_cell
+    from repro.core.autotune import (autotune, load_tuned, save_tuned,
+                                    tuned_key, tuned_record)
+    from repro.core.calibrate import calibrated_cost_model
 
-    cfg_edit = None
-    if args.cfg:
-        edits = json.loads(args.cfg)
-        # tuples for sharding_overrides etc.
-        def cfg_edit(cfg):
-            fixed = {}
-            for k, v in edits.items():
-                if k == "sharding_overrides":
-                    v = tuple((a, tuple(b) if isinstance(b, list) else b)
-                              for a, b in v)
-                fixed[k] = v
-            return dataclasses.replace(cfg, **fixed)
+    grid = tuple(int(x) for x in args.grid.split(",")) if args.grid \
+        else None
+    rpn = args.ranks_per_node or None
+    cm = calibrated_cost_model(args.calibration) if args.calibration \
+        else None
+    size = f"b{args.block}"
+    result = autotune(args.pattern, args.niter, grid=grid,
+                      ranks_per_node=rpn, cm=cm, full=args.full,
+                      size=size, **_size_kwargs(args.pattern, args.block))
 
-    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
-                   overrides=json.loads(args.overrides) if args.overrides
-                   else None,
-                   moe_impl=args.moe_impl, cfg_edit=cfg_edit)
-    rec["tag"] = args.tag
+    print(f"hillclimb: {args.pattern} grid={result.grid} rpn={rpn or 0} "
+          f"{size}: {result.evaluated} candidates"
+          + (f", {len(result.errors)} errored" if result.errors else ""))
+    print(f"  default: {result.default_config.label():<28} "
+          f"{result.default_derived:8.2f} us/iter")
+    for i, (cfg, derived) in enumerate(result.leaderboard[:args.top]):
+        marker = " <- best" if i == 0 else ""
+        print(f"  #{i + 1:<2d}     {cfg.label():<28} {derived:8.2f} "
+              f"us/iter{marker}")
+    print(f"  tuned wins {result.improvement:.1%} over default")
+
     os.makedirs(args.out, exist_ok=True)
-    path = os.path.join(
-        args.out, f"{args.arch}__{args.shape}__{args.tag}.json")
+    tag = args.tag or f"{size}_rpn{rpn or 0}"
+    path = os.path.join(args.out, f"{args.pattern}__{tag}.json")
     with open(path, "w") as f:
-        json.dump(rec, f, indent=1)
-    brief = {k: rec.get(k) for k in ("status", "roofline", "memory",
-                                     "compile_s", "error")}
-    print(json.dumps(brief, indent=1)[:2000])
+        json.dump(dict(result.to_dict(top=args.top),
+                       calibration=args.calibration), f, indent=1)
     print(f"-> {path}")
+
+    if not args.no_save:
+        key = tuned_key(args.pattern, result.grid, rpn, size)
+        cache = load_tuned(args.tuned)
+        cache[key] = tuned_record(result)
+        print(f"-> {save_tuned(cache, args.tuned)} [{key}]")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,11 @@ from repro.core.schedule import (assign_streams, chunk_puts,
                                  stream_interleaved_order, validate_deps)
 from repro.core.throttle import (CostModel, faces_programs, simulate_faces,
                                  simulate_pipeline, simulate_program)
+from repro.core.autotune import (AutotuneResult, ScheduleConfig, autotune,
+                                 resolve_config, search_space, tuned_config)
+from repro.core.calibrate import (calibrated_cost_model, fit_cost_model,
+                                  fit_link, load_calibration,
+                                  save_calibration)
 from repro.core import halo
 
 __all__ = ["STStream", "STWindow", "TriggeredOp", "TriggeredProgram",
@@ -31,4 +36,7 @@ __all__ = ["STStream", "STWindow", "TriggeredOp", "TriggeredProgram",
            "validate_deps", "register_pattern", "get_pattern",
            "available_patterns", "build_pattern", "pattern_programs",
            "simulate_pattern", "simulate_program", "simulate_pipeline",
-           "simulate_faces", "faces_programs", "halo"]
+           "simulate_faces", "faces_programs", "halo",
+           "ScheduleConfig", "AutotuneResult", "autotune", "search_space",
+           "tuned_config", "resolve_config", "fit_link", "fit_cost_model",
+           "calibrated_cost_model", "save_calibration", "load_calibration"]

@@ -205,6 +205,8 @@ def pattern_programs(name: str, niter: int, *, grid=None,
                      ranks_per_node: Optional[int] = None,
                      node_aware: bool = False, coalesce: bool = False,
                      pack: bool = False, chunk_bytes: int = 0,
+                     config=None, tuned_path: Optional[str] = None,
+                     size: Optional[str] = None,
                      **build_kw):
     """Lower+schedule a pattern on a device-free stream — the same
     builder and passes the executors use, minus a mesh. ``nstreams>1``
@@ -217,21 +219,47 @@ def pattern_programs(name: str, niter: int, *, grid=None,
     node aggregation); ``pack`` materializes off-node aggregation groups
     as packed multi-buffer put descriptors (schedule.pack_puts);
     ``chunk_bytes`` splits larger off-node puts into pipelined chunk
-    chains (schedule.chunk_puts)."""
+    chains (schedule.chunk_puts).
+
+    ``config`` overrides the individual knobs above with a tuned
+    :class:`~repro.core.autotune.ScheduleConfig` (or its dict form) —
+    including the BUILD-time knobs double_buffer and multicast. The
+    string ``"auto"`` consults the tuned cache (``tuned_path`` or
+    ``results/tuned.json``) under the ``(name, grid, ranks_per_node,
+    size)`` key, autotuning on a miss; ``size`` is the explicit
+    message-size token of that key (e.g. ``"b4"``)."""
     from repro.core.stream import STStream
 
     p = get_pattern(name)
     grid = tuple(grid) if grid is not None else p.default_grid
+    if config is not None:
+        from repro.core.autotune import resolve_config
+        cfg = resolve_config(config, name, grid=grid,
+                             ranks_per_node=ranks_per_node, size=size,
+                             path=tuned_path, **build_kw)
+        throttle, resources = cfg.throttle, cfg.resources
+        merged, ordered = cfg.merged, cfg.ordered
+        nstreams, node_aware = cfg.nstreams, cfg.node_aware
+        coalesce, pack = cfg.coalesce, cfg.pack
+        chunk_bytes = cfg.chunk_bytes
+        double_buffer = cfg.double_buffer
+        if cfg.multicast is not None:
+            build_kw = dict(build_kw, multicast=cfg.multicast)
     stream = STStream(None, p.grid_axes, grid_shape=grid)
     p.build(stream, niter, merged=merged, host_sync_every=host_sync_every,
             double_buffer=double_buffer, ranks_per_node=ranks_per_node,
             **build_kw)
-    return stream.scheduled_programs(throttle=throttle, resources=resources,
-                                     merged=merged, ordered=ordered,
-                                     nstreams=nstreams,
-                                     node_aware=node_aware,
-                                     coalesce=coalesce, pack=pack,
-                                     chunk_bytes=chunk_bytes)
+    progs = stream.scheduled_programs(throttle=throttle,
+                                      resources=resources,
+                                      merged=merged, ordered=ordered,
+                                      nstreams=nstreams,
+                                      node_aware=node_aware,
+                                      coalesce=coalesce, pack=pack,
+                                      chunk_bytes=chunk_bytes)
+    if config is not None:
+        for prog in progs:
+            prog.meta["config"] = cfg.to_dict()
+    return progs
 
 
 def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
@@ -242,6 +270,8 @@ def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
                      ranks_per_node: Optional[int] = None,
                      node_aware: bool = False, coalesce: bool = False,
                      pack: bool = False, chunk_bytes: int = 0,
+                     config=None, tuned_path: Optional[str] = None,
+                     size: Optional[str] = None,
                      **build_kw) -> float:
     """Derived critical-path time of ``niter`` pattern iterations.
 
@@ -257,9 +287,19 @@ def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
     multi-buffer descriptors (one alpha + summed beta + one NIC
     injection per group); ``chunk_bytes`` splits larger off-node puts
     into pipelined chunk chains (per-chunk beta, first-chunk-only
-    alpha)."""
+    alpha).
+
+    ``config`` overrides the schedule/build knobs with a tuned
+    :class:`~repro.core.autotune.ScheduleConfig` (``"auto"`` consults
+    the tuned cache — see :func:`pattern_programs`); a config wins over
+    ``policy`` for the throttle choice. ``cm="calibrated"`` prices with
+    the measured-constants model from ``results/calibration.json``
+    (seed constants when no calibration exists)."""
     from repro.core.throttle import simulate_pipeline
 
+    if cm == "calibrated":
+        from repro.core.calibrate import calibrated_cost_model
+        cm = calibrated_cost_model()
     host_sync_every = 1 if policy == "application" else 0
     throttle = "static" if policy == "application" else policy
     progs = pattern_programs(name, niter, grid=grid, throttle=throttle,
@@ -270,5 +310,6 @@ def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
                              ranks_per_node=ranks_per_node,
                              node_aware=node_aware, coalesce=coalesce,
                              pack=pack, chunk_bytes=chunk_bytes,
-                             **build_kw)
+                             config=config, tuned_path=tuned_path,
+                             size=size, **build_kw)
     return simulate_pipeline(progs, cm, host_orchestrated)

@@ -639,3 +639,12 @@ def schedule(prog: TriggeredProgram, *, throttle: str = "adaptive",
     prog = assign_streams(prog, nstreams)
     prog = validate_deps(prog)
     return prog
+
+
+def autotune(*args, **kwargs):
+    """Simulator-guided schedule search — delegates to
+    :func:`repro.core.autotune.autotune` (lazy import keeps this module
+    free of the tuner's cache/serialization machinery). See that module
+    for the search space, pruning rules, and the tuned-config cache."""
+    from repro.core.autotune import autotune as _search
+    return _search(*args, **kwargs)

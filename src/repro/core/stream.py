@@ -232,11 +232,34 @@ class STStream:
                            node_aware: bool = False,
                            coalesce: bool = False,
                            pack: bool = False,
-                           chunk_bytes: int = 0) -> List[TriggeredProgram]:
+                           chunk_bytes: int = 0,
+                           config=None) -> List[TriggeredProgram]:
         """Lower the op queue and run the schedule passes; one scheduled
         descriptor DAG per host_sync-delimited segment. Cached per
         (queue, options) so repeated synchronize calls reuse programs
-        (and therefore compiled executables)."""
+        (and therefore compiled executables).
+
+        ``config`` (a :class:`repro.core.autotune.ScheduleConfig` or its
+        dict form) expands into the schedule-pass knobs above BEFORE the
+        cache key is computed, so a tuned config and its spelled-out
+        kwargs share one cache entry. Build-time knobs the config may
+        carry (double_buffer, multicast) are ignored here — the queue is
+        already built; rebuild via ``pattern_programs(config=...)`` to
+        apply those. The string ``"auto"`` is rejected: a raw stream
+        does not know its (pattern, topology, size) cache key — resolve
+        it with ``repro.core.autotune.tuned_config`` or
+        ``pattern_programs(config="auto")`` instead."""
+        if config is not None:
+            from repro.core.autotune import ScheduleConfig
+            if isinstance(config, str):
+                raise ValueError(
+                    "scheduled_programs(config='auto') is ambiguous on a "
+                    "raw stream (no pattern/topology/size key); resolve "
+                    "it via repro.core.autotune.tuned_config or "
+                    "pattern_programs(config='auto')")
+            if isinstance(config, dict):
+                config = ScheduleConfig.from_dict(config)
+            return self.scheduled_programs(**config.sched_kwargs())
         key = (tuple(op.cache_key() for op in self.program),
                throttle, resources, merged, ordered, nstreams,
                node_aware, coalesce, pack, chunk_bytes)
@@ -258,7 +281,7 @@ class STStream:
                     donate: bool = True, ordered: bool = False,
                     nstreams: int = 1, node_aware: bool = False,
                     coalesce: bool = False, pack: bool = False,
-                    chunk_bytes: int = 0):
+                    chunk_bytes: int = 0, config=None):
         """Execute the enqueued program; returns the new state.
 
         mode="st": one compiled program, single host sync (this call).
@@ -266,7 +289,9 @@ class STStream:
         ``pack`` materializes off-node aggregation groups as packed
         multi-buffer put descriptors (schedule.pack_puts);
         ``chunk_bytes`` splits larger off-node puts into pipelined chunk
-        chains (schedule.chunk_puts).
+        chains (schedule.chunk_puts). ``config`` expands a tuned
+        :class:`~repro.core.autotune.ScheduleConfig` into the schedule
+        knobs (see :meth:`scheduled_programs`).
         """
         if self.mesh is None:
             raise ValueError("cannot execute a device-free stream "
@@ -274,7 +299,8 @@ class STStream:
         for prog in self.scheduled_programs(
                 throttle=throttle, resources=resources, merged=merged,
                 ordered=ordered, nstreams=nstreams, node_aware=node_aware,
-                coalesce=coalesce, pack=pack, chunk_bytes=chunk_bytes):
+                coalesce=coalesce, pack=pack, chunk_bytes=chunk_bytes,
+                config=config):
             if mode == "st":
                 state = backends.run_compiled(self, prog, state,
                                               donate=donate)

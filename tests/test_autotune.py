@@ -1,0 +1,404 @@
+"""Simulator-guided autotuner (core/autotune.py) + measured alpha-beta
+calibration (core/calibrate.py):
+
+  * the search never returns a config worse than the default under the
+    simulator, for all four patterns (the default is candidate zero by
+    construction),
+  * search-space pruning: no unbounded throttle policies, double_buffer
+    only with multiple streams, node_aware/pack/chunk only on multi-
+    node topologies, multicast enumerated only for broadcast,
+  * calibration round-trips: a least-squares fit on synthetic timings
+    generated from planted constants recovers them within 5%, fitted
+    constants clamp at zero, save/load round-trips and a missing file
+    falls back to the seed model,
+  * two-stage measured attribution: single-node records fit the intra
+    link, multi-node records attribute the residual (after the intra
+    prediction) to the inter link,
+  * tuned.json cache: a hit skips the search entirely (monkeypatched
+    spy), a miss searches and persists,
+  * config threading: pattern_programs/simulate_pattern accept
+    ScheduleConfig / dict / "auto" and stamp the resolved config into
+    program meta; a raw stream rejects "auto" (it has no cache key),
+  * executor equivalence (slow, subprocess): a tuned config's schedule
+    is bit-identical to the default schedule through run_compiled AND
+    run_host on faces + broadcast.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core import (CostModel, pattern_programs, simulate_pattern,
+                        simulate_pipeline)
+from repro.core.schedule import autotune as schedule_autotune
+from repro.core.autotune import (AutotuneResult, ScheduleConfig, autotune,
+                                 resolve_config, search_space, tuned_config,
+                                 tuned_key)
+from repro.core.calibrate import (calibrated_cost_model, fit_cost_model,
+                                  fit_link, load_calibration,
+                                  samples_from_records, save_calibration,
+                                  synthetic_records)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SIZE_KW = {"faces": dict(n=(4, 4, 4)), "ring": dict(seq_per_rank=8),
+           "a2a": dict(seq=8), "broadcast": dict(tile=8)}
+GRID = {"faces": (2, 2, 2), "ring": (4,), "a2a": (4,),
+        "broadcast": (2, 4)}
+RPN = {"faces": 4, "ring": 2, "a2a": 2, "broadcast": 2}   # two nodes each
+
+
+# ---------------------------------------------------------------------------
+# search
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pat", sorted(GRID))
+def test_autotune_no_worse_than_default(pat):
+    """The winner's derived latency never exceeds the default config's —
+    the default is always candidate zero, so this holds by construction
+    and a failure means the search itself is broken."""
+    r = autotune(pat, 2, grid=GRID[pat], ranks_per_node=RPN[pat],
+                 size="s", **SIZE_KW[pat])
+    assert isinstance(r, AutotuneResult)
+    assert r.best_derived <= r.default_derived
+    assert not r.errors, r.errors
+    assert r.evaluated == len(r.leaderboard) > 1
+    # the leaderboard is ranked and contains the default somewhere
+    ders = [d for _, d in r.leaderboard]
+    assert ders == sorted(ders)
+    assert any(c == r.default_config for c, _ in r.leaderboard)
+
+
+def test_autotune_default_wins_against_bad_candidates():
+    """With an explicit candidate list of strictly-worse points, the
+    default itself is returned — tuned == default, never tuned worse."""
+    bad = ScheduleConfig(throttle="static", resources=4)
+    r = autotune("ring", 2, grid=(4,), ranks_per_node=2,
+                 candidates=[bad], **SIZE_KW["ring"])
+    assert r.evaluated == 2
+    assert r.best_derived <= r.default_derived
+    assert r.best_derived == min(d for _, d in r.leaderboard)
+
+
+def test_search_space_pruning():
+    """No unbounded throttle; build-time/topology knobs only where they
+    can matter; multicast only for broadcast."""
+    for pat in ("faces", "ring", "a2a", "broadcast"):
+        for rpn in (None, 2):
+            for cfg in search_space(pat, rpn):
+                assert cfg.throttle in ("adaptive", "static")
+                assert not cfg.ordered and not cfg.coalesce
+                if cfg.nstreams == 1:
+                    assert not cfg.double_buffer
+                if rpn is None:
+                    assert not cfg.node_aware and not cfg.pack
+                    assert cfg.chunk_bytes == 0
+                if pat != "broadcast":
+                    assert cfg.multicast is None
+    assert any(c.multicast is True for c in search_space("broadcast", 2))
+    assert any(c.multicast is False for c in search_space("broadcast", 2))
+    # the full space is a strict superset of the truncated one
+    assert set(search_space("ring", 2)) < set(
+        search_space("ring", 2, full=True))
+
+
+def test_autotune_errors_are_recorded_not_raised():
+    """A candidate whose simulation raises scores inf and lands in
+    result.errors instead of aborting the search."""
+    bad = ScheduleConfig(throttle="no_such_policy")
+    r = autotune("ring", 2, grid=(4,), candidates=[bad], **SIZE_KW["ring"])
+    assert len(r.errors) == 1 and r.errors[0][0] == bad
+    assert r.best == r.default_config
+
+
+def test_schedule_autotune_delegation():
+    """The tentpole's literal name: schedule.autotune runs the search."""
+    r = schedule_autotune("ring", 2, grid=(4,), **SIZE_KW["ring"])
+    assert isinstance(r, AutotuneResult)
+    assert r.best_derived <= r.default_derived
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+def test_calibration_recovers_planted_constants():
+    """Acceptance criterion: fitting on synthetic timings generated from
+    KNOWN constants recovers every alpha-beta within 5%."""
+    planted = CostModel(put_base=3.3, put_per_kb=0.07,
+                        inter_base=11.0, inter_per_kb=0.41)
+    cm, fits = fit_cost_model(synthetic_records(planted))
+    for field in ("put_base", "put_per_kb", "inter_base", "inter_per_kb"):
+        want, got = getattr(planted, field), getattr(cm, field)
+        assert abs(got - want) / want < 0.05, (field, want, got)
+    assert set(fits) == {"intra", "inter"}
+    for fit in fits.values():
+        assert fit.residual < 1e-6 and fit.nsamples == 5
+
+
+def test_fit_clamps_negative_constants():
+    """A latency model has no negative terms: noisy samples whose lstsq
+    intercept goes below zero clamp to alpha=0 instead."""
+    fit = fit_link([(1024.0, 0.1), (4096.0, 2.0)], "intra")
+    assert fit.alpha == 0.0 and fit.beta > 0.0
+    # one sample (or one distinct size) pins beta=0, alpha=mean
+    solo = fit_link([(2048.0, 5.0)], "inter")
+    assert solo.alpha == 5.0 and solo.beta == 0.0
+
+
+def test_fit_untouched_links_keep_seed_constants():
+    cm, fits = fit_cost_model([("intra", 1024.0, 7.0)])
+    assert set(fits) == {"intra"}
+    seed = CostModel()
+    assert cm.inter_base == seed.inter_base
+    assert cm.inter_per_kb == seed.inter_per_kb
+    assert cm.put_base == 7.0 and cm.put_per_kb == 0.0
+
+
+def test_calibration_save_load_roundtrip(tmp_path):
+    path = str(tmp_path / "calibration.json")
+    planted = CostModel(put_base=2.5, inter_per_kb=0.5)
+    cm, fits = fit_cost_model(synthetic_records(planted))
+    save_calibration(path, cm, fits, {"source": "test"})
+    assert calibrated_cost_model(path) == cm
+    rec = load_calibration(path)
+    assert rec["meta"]["source"] == "test"
+    assert set(rec["fits"]) == {"intra", "inter"}
+    # missing file falls back to the seed constants, never raises
+    missing = str(tmp_path / "nope.json")
+    assert calibrated_cost_model(missing) == CostModel()
+    assert load_calibration(missing) is None
+
+
+def test_samples_from_records_two_stage_attribution():
+    """Single-node records fit the intra link; multi-node records
+    subtract the intra prediction and attribute the residual to the
+    inter puts — on noise-free records the recovered per-put inter time
+    equals the model's t_put exactly."""
+    cm = CostModel()
+    recs = []
+    for nbytes in (1024.0, 8192.0):
+        stats = dict(puts_per_epoch=4.0, bytes_per_epoch=4 * nbytes,
+                     epochs=2, inter_puts=0)
+        recs.append(dict(name="sn", ranks_per_node=None, stats=stats,
+                         us_per_iter=4 * cm.t_put("intra", nbytes)))
+        # 2 of the 4 puts cross the node boundary (inter_puts counts
+        # the whole program: 2 per epoch x 2 epochs)
+        mstats = dict(stats, inter_puts=4)
+        recs.append(dict(name="mn", ranks_per_node=2, stats=mstats,
+                         us_per_iter=2 * cm.t_put("intra", nbytes)
+                         + 2 * cm.t_put("inter", nbytes)))
+    samples = samples_from_records(recs)
+    by_link = {}
+    for link, nbytes, t in samples:
+        by_link.setdefault(link, []).append((nbytes, t))
+    assert len(by_link["intra"]) == 2 and len(by_link["inter"]) == 2
+    for nbytes, t in by_link["inter"]:
+        assert t == pytest.approx(cm.t_put("inter", nbytes), rel=1e-9)
+    fitted, _ = fit_cost_model(samples)
+    assert fitted.inter_base == pytest.approx(cm.inter_base, rel=0.05)
+    assert fitted.inter_per_kb == pytest.approx(cm.inter_per_kb, rel=0.05)
+
+
+def test_samples_skip_zero_put_records():
+    assert samples_from_records(
+        [dict(name="x", ranks_per_node=None, us_per_iter=5.0,
+              stats=dict(puts_per_epoch=0.0, bytes_per_epoch=0.0))]) == []
+
+
+# ---------------------------------------------------------------------------
+# tuned cache + config threading
+# ---------------------------------------------------------------------------
+
+def test_tuned_cache_hit_skips_search(tmp_path, monkeypatch):
+    # import the submodule itself: the package re-exports a function
+    # named autotune, which shadows attribute-style module access
+    at = sys.modules["repro.core.autotune"]
+    path = str(tmp_path / "tuned.json")
+    calls = []
+    real = at.autotune
+
+    def spy(*a, **kw):
+        calls.append(a)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(at, "autotune", spy)
+    c1 = at.tuned_config("ring", grid=(4,), ranks_per_node=2, size="b8",
+                         path=path, **SIZE_KW["ring"])
+    assert len(calls) == 1 and os.path.exists(path)
+    c2 = at.tuned_config("ring", grid=(4,), ranks_per_node=2, size="b8",
+                         path=path, **SIZE_KW["ring"])
+    assert len(calls) == 1, "cache hit must skip the search"
+    assert c1 == c2
+    # a different size token is a different point -> fresh search
+    at.tuned_config("ring", grid=(4,), ranks_per_node=2, size="b64",
+                    path=path, seq_per_rank=64)
+    assert len(calls) == 2
+
+
+def test_tuned_config_missing_without_autotune_raises(tmp_path):
+    with pytest.raises(KeyError, match="no tuned config"):
+        tuned_config("ring", grid=(4,), ranks_per_node=2, size="b8",
+                     path=str(tmp_path / "tuned.json"),
+                     autotune_missing=False, **SIZE_KW["ring"])
+
+
+def test_tuned_key_is_size_token_based():
+    """The key names the point by an explicit token, so callers spelling
+    the same program with different kwarg subsets agree."""
+    assert tuned_key("faces", (2, 2, 2), 4, "b4") == "faces|2x2x2|rpn4|b4"
+    assert tuned_key("ring", (4,), None, None) == "ring|4|rpn0|-"
+
+
+def test_resolve_config_forms(tmp_path):
+    cfg = ScheduleConfig(nstreams=2, pack=True)
+    assert resolve_config(None, "ring") is None
+    assert resolve_config(cfg, "ring") is cfg
+    assert resolve_config(cfg.to_dict(), "ring") == cfg
+    with pytest.raises(TypeError, match="config must be"):
+        resolve_config(42, "ring")
+    with pytest.raises(ValueError, match="unknown field"):
+        resolve_config({"nope": 1}, "ring")
+    auto = resolve_config("auto", "ring", grid=(4,), ranks_per_node=2,
+                          size="b8", path=str(tmp_path / "t.json"),
+                          **SIZE_KW["ring"])
+    assert isinstance(auto, ScheduleConfig)
+
+
+def test_config_threads_through_pattern_programs():
+    """A config-built program equals the spelled-out-kwargs program and
+    stamps the resolved config into meta."""
+    cfg = ScheduleConfig(throttle="static", resources=8, nstreams=2,
+                         node_aware=True, pack=True)
+    via_cfg = pattern_programs("faces", 2, grid=(2, 2, 2),
+                               ranks_per_node=4, config=cfg,
+                               **SIZE_KW["faces"])
+    assert via_cfg[0].meta["config"] == cfg.to_dict()
+    spelled = pattern_programs("faces", 2, grid=(2, 2, 2),
+                               ranks_per_node=4, throttle="static",
+                               resources=8, nstreams=2, node_aware=True,
+                               pack=True, **SIZE_KW["faces"])
+    assert simulate_pipeline(via_cfg) == simulate_pipeline(spelled)
+
+
+def test_config_overrides_build_knobs():
+    """double_buffer and multicast are build-time: the config changes
+    the enqueued program, not just the schedule passes."""
+    cfg = ScheduleConfig(nstreams=2, double_buffer=True, multicast=False)
+    progs = pattern_programs("broadcast", 2, grid=(2, 4),
+                             ranks_per_node=2, config=cfg, tile=8)
+    assert progs[0].stats()["multicast_puts"] == 0
+    mc = pattern_programs("broadcast", 2, grid=(2, 4), ranks_per_node=2,
+                          config=ScheduleConfig(multicast=True), tile=8)
+    assert mc[0].stats()["multicast_puts"] > 0
+
+
+def test_config_auto_through_pattern_programs(tmp_path):
+    path = str(tmp_path / "tuned.json")
+    progs = pattern_programs("ring", 2, grid=(4,), ranks_per_node=2,
+                             config="auto", tuned_path=path, size="b8",
+                             **SIZE_KW["ring"])
+    cached = tuned_config("ring", grid=(4,), ranks_per_node=2, size="b8",
+                          path=path, **SIZE_KW["ring"])
+    assert progs[0].meta["config"] == cached.to_dict()
+    tuned = simulate_pattern("ring", 2, grid=(4,), ranks_per_node=2,
+                             config="auto", tuned_path=path, size="b8",
+                             **SIZE_KW["ring"])
+    default = simulate_pattern("ring", 2, grid=(4,), ranks_per_node=2,
+                               **SIZE_KW["ring"])
+    assert tuned <= default
+
+
+def test_stream_rejects_auto_config():
+    """A raw stream has no (pattern, topology, size) identity, so
+    'auto' must be resolved by the callers that do."""
+    from repro.core import STStream
+    stream = STStream(None, ("x",), grid_shape=(4,))
+    with pytest.raises(ValueError, match="ambiguous on a raw stream"):
+        stream.scheduled_programs(config="auto")
+
+
+def test_stream_accepts_schedule_config_dict():
+    from repro.core import STStream, build_pattern
+    stream = STStream(None, ("data",), grid_shape=(4,))
+    build_pattern(stream, "ring", 2, **SIZE_KW["ring"])
+    cfg = ScheduleConfig(throttle="static", resources=8)
+    via_cfg = stream.scheduled_programs(config=cfg.to_dict())
+    spelled = stream.scheduled_programs(throttle="static", resources=8,
+                                        merged=True)
+    assert via_cfg is spelled      # same schedule cache entry
+
+
+# ---------------------------------------------------------------------------
+# executor equivalence (multi-device, subprocess)
+# ---------------------------------------------------------------------------
+
+EQUIV_SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    from repro.core import STStream, get_pattern
+    from repro.core.autotune import tuned_config
+    from repro.launch.mesh import make_mesh
+
+    CASES = [
+        ("faces", (2, 2, 2), ("x", "y", "z"), 4, dict(n=(3, 3, 3)),
+         ["acc", "res", "src", "it"], ["src"]),
+        ("broadcast", (2, 4), ("row", "col"), 2, dict(tile=8),
+         ["ctile", "it"], ["abase", "b"]),
+    ]
+    niter = 2
+    tuned_path = os.path.join(tempfile.mkdtemp(), "tuned.json")
+
+    def run(pat, mesh, axes, rpn, kw, seeds, outputs, mode, cfg):
+        stream = STStream(mesh, axes)
+        build_kw, db = dict(kw), False
+        if cfg is not None:
+            db = cfg.double_buffer
+            build_kw.update({k: v for k, v in
+                             cfg.build_overrides().items()
+                             if k != "double_buffer"})
+        win, _ = pat.build(stream, niter, merged=True,
+                           ranks_per_node=rpn, double_buffer=db,
+                           **build_kw)
+        state = stream.allocate()
+        rng = np.random.RandomState(0)
+        for b in seeds:
+            k = win.qual(b)
+            val = rng.rand(*state[k].shape).astype(
+                np.asarray(state[k]).dtype) * 0.3
+            state[k] = jax.device_put(val, state[k].sharding)
+        state = stream.synchronize(state, mode=mode, donate=False,
+                                   config=cfg)
+        return {b: np.asarray(state[win.qual(b)]) for b in outputs}
+
+    for name, grid, axes, rpn, kw, outputs, seeds in CASES:
+        pat = get_pattern(name)
+        mesh = make_mesh(grid, axes)
+        cfg = tuned_config(name, grid=grid, ranks_per_node=rpn,
+                           size="sub", path=tuned_path, **kw)
+        for mode in ("st", "host"):
+            ref = run(pat, mesh, axes, rpn, kw, seeds, outputs, mode,
+                      None)
+            got = run(pat, mesh, axes, rpn, kw, seeds, outputs, mode,
+                      cfg)
+            for b in outputs:
+                assert (got[b] == ref[b]).all(), \\
+                    (name, mode, b, np.abs(got[b] - ref[b]).max())
+                assert np.asarray(got[b]).any(), (name, b, "vacuous")
+            print(f"OK tuned {name}_{mode} [{cfg.label()}]")
+""")
+
+
+@pytest.mark.slow
+def test_tuned_config_bit_identical_both_executors():
+    """Acceptance: the autotuned schedule (including build-time knobs
+    the winner may flip) is bit-identical to the default schedule
+    through run_compiled AND run_host on faces + broadcast."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run([sys.executable, "-c", EQUIV_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert r.stdout.count("OK tuned") == 4
