@@ -160,6 +160,12 @@ def main():
     ap.add_argument("--verify_tuned", type=int, default=0,
                     help="also run the flag-default schedule and require "
                          "bit-identical pattern outputs vs the tuned one")
+    ap.add_argument("--verify_static", type=int, default=0,
+                    help="run the static schedule verifier "
+                         "(repro.core.verify) over the scheduled "
+                         "program(s) before executing; exits nonzero on "
+                         "any error finding and records the findings "
+                         "count in #stats/JSON")
     ap.add_argument("--name", default=None)
     ap.add_argument("--json-dir", default=None,
                     help="also write a {name}.json record (descriptor "
@@ -238,6 +244,22 @@ def main():
     def run_once(st):
         return stream.synchronize(st, mode=args.mode, donate=False,
                                   **sched_opts)
+
+    verify_findings = None
+    if args.verify_static:
+        # prove the schedule race/deadlock/lint/resource-clean BEFORE
+        # the first launch — the same pass suite CI runs over the whole
+        # quick space, here over exactly the schedule this worker runs
+        from repro.core.verify import verify_programs
+        vreport = verify_programs(stream.scheduled_programs(**sched_opts))
+        verify_findings = len(vreport.findings)
+        if not vreport.ok:
+            sys.exit("static schedule verification failed:\n"
+                     + vreport.summary())
+        print(f"# static-verified {args.pattern} "
+              f"findings={verify_findings} "
+              f"events={vreport.checked.get('events', 0)} "
+              f"conflict_pairs={vreport.checked.get('conflict_pairs', 0)}")
 
     state = run_once(state)              # warm-up (compiles)
     reps = int(os.environ.get("FACES_REPS", "1"))
@@ -402,6 +424,8 @@ def main():
 
     stats = progs[0].stats()
     stats["segments"] = len(progs)
+    if verify_findings is not None:
+        stats["verify_findings"] = verify_findings
     name = args.name or (f"{args.pattern}_{args.mode}_{throttle}"
                          f"_m{int(merged)}_o{args.ordered}_{ndev}r")
     print(f"{name},{us_per_iter:.1f},{derived:.2f}")
@@ -414,7 +438,9 @@ def main():
           f"resource_high_water={stats['resource_high_water']} "
           f"critical_path_depth={stats['critical_path_depth']} "
           f"descriptors={stats['descriptors']} "
-          f"dep_edges={stats['dep_edges']}")
+          f"dep_edges={stats['dep_edges']}"
+          + (f" verify_findings={verify_findings}"
+             if verify_findings is not None else ""))
     if args.json_dir:
         os.makedirs(args.json_dir, exist_ok=True)
         rec = dict(name=name, pattern=args.pattern, mode=args.mode,

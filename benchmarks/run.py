@@ -88,6 +88,11 @@ FAILURES = []      # worker invocations that exited nonzero or hung
 
 def _worker(section="", **kw):
     kw.setdefault("niter", os.environ.get("BENCH_NITER", "10"))
+    if env_flag("BENCH_VERIFY_STATIC"):
+        # CI bench-smoke sets this: every worker statically verifies its
+        # scheduled program (races, liveness, descriptor lint, slot
+        # bounds) before the first launch and dies on any error finding
+        kw.setdefault("verify_static", 1)
     cmd = [sys.executable, WORKER]
     for k, v in kw.items():
         cmd += [f"--{k}", str(v)]

@@ -26,6 +26,9 @@ from repro.core.autotune import (AutotuneResult, ScheduleConfig, autotune,
 from repro.core.calibrate import (calibrated_cost_model, fit_cost_model,
                                   fit_link, load_calibration,
                                   save_calibration)
+from repro.core.verify import (Finding, ScheduleVerificationError,
+                               VerifyReport, find_cycle, verify,
+                               verify_programs)
 from repro.core import halo
 
 __all__ = ["STStream", "STWindow", "TriggeredOp", "TriggeredProgram",
@@ -39,4 +42,6 @@ __all__ = ["STStream", "STWindow", "TriggeredOp", "TriggeredProgram",
            "simulate_faces", "faces_programs", "halo",
            "ScheduleConfig", "AutotuneResult", "autotune", "search_space",
            "tuned_config", "resolve_config", "fit_link", "fit_cost_model",
-           "calibrated_cost_model", "save_calibration", "load_calibration"]
+           "calibrated_cost_model", "save_calibration", "load_calibration",
+           "Finding", "VerifyReport", "ScheduleVerificationError",
+           "verify", "verify_programs", "find_cycle"]

@@ -179,7 +179,8 @@ def lower_segment(stream, seg) -> TriggeredProgram:
             for p in flushed:
                 p.epoch = epoch
                 p.threshold = arm + 1
-                p.chained.epoch = epoch
+                if p.chained is not None:
+                    p.chained.epoch = epoch
                 nodes.append(p)
             nodes.append(TriggeredOp(
                 "complete", window=win.name, epoch=epoch, phase=op.phase))

@@ -414,19 +414,34 @@ def chunk_puts(prog: TriggeredProgram,
 
 def _off_node_first(run):
     """Stable node-aware order of one epoch's put run: off-node
-    ("inter") puts WITHOUT an in-run dependency edge go first (they can
+    ("inter") puts go first within each dependency-free burst (they can
     inject into the NIC command queue immediately — issuing them early
-    is the whole win), then dependency-free on-node puts, then every
-    dependency-gated put in its ORIGINAL order. Gated puts stay last
-    and unsorted because (a) the original order already satisfies their
-    in-run edges and (b) a gated put enqueued early would head-of-line
-    block the NIC behind a transfer that cannot start yet. Two puts
-    connected by a dependency edge therefore never swap."""
+    is the whole win). A dependency-gated put is a BARRIER the reorder
+    never crosses: (a) the original order already satisfies its in-run
+    edges, (b) a gated put enqueued early would head-of-line block the
+    NIC behind a transfer that cannot start yet, and (c) a throttle
+    gate (static weak sync / adaptive slot-recapture edge) bounds the
+    descriptors in flight only while every put that FOLLOWED it keeps
+    following it — hoisting free puts across the gate would let the
+    schedule hold more slots than the policy's ``resources`` claims
+    (the static verifier's resource-safety pass proves the bound per
+    schedule). Two puts connected by a dependency edge never swap."""
     in_run = {p.op_id for p in run}
-    free = [p for p in run if not any(d in in_run for d in p.deps)]
-    gated = [p for p in run if any(d in in_run for d in p.deps)]
-    return ([p for p in free if p.link == "inter"]
-            + [p for p in free if p.link != "inter"] + gated)
+    out, burst = [], []
+
+    def flush():
+        out.extend(p for p in burst if p.link == "inter")
+        out.extend(p for p in burst if p.link != "inter")
+        burst.clear()
+
+    for p in run:
+        if any(d in in_run for d in p.deps):
+            flush()
+            out.append(p)
+        else:
+            burst.append(p)
+    flush()
+    return out
 
 
 def node_aware_pass(prog: TriggeredProgram, node_aware: bool = True,
@@ -585,20 +600,62 @@ def stream_interleaved_order(prog: TriggeredProgram):
                 heads[s] = i + 1
                 progressed = True
         if not progressed:
+            # name a witness: among the stuck stream heads (and anything
+            # unemitted behind them), each node waits for its unemitted
+            # deps and its unemitted stream predecessor
+            from repro.core.verify import find_cycle
+
+            stuck = {n.op_id: n for q in queues.values() for n in q
+                     if n.op_id not in emitted}
+
+            pos = {n.op_id: (s, i) for s, q in queues.items()
+                   for i, n in enumerate(q)}
+
+            def waiting_for(op_id):
+                node = stuck[op_id]
+                succ = [d for d in node.deps if d in stuck]
+                s, i = pos[op_id]
+                if i > 0 and queues[s][i - 1].op_id in stuck:
+                    succ.append(queues[s][i - 1].op_id)
+                return succ
+
+            cyc = find_cycle(stuck, waiting_for)
+            witness = " -> ".join(
+                f"{stuck[i].kind}#{i}" for i in (cyc or [])) or \
+                f"stuck heads: {sorted(stuck)[:8]}"
             raise RuntimeError(
                 "stream_interleaved_order: cyclic or forward dependency "
-                "edges — the schedule passes emitted a non-DAG")
+                "edges — the schedule passes emitted a non-DAG "
+                f"(witness cycle: {witness})")
     return order
 
 
 def validate_deps(prog: TriggeredProgram) -> TriggeredProgram:
-    """Every dependency edge must name an op_id present in this program.
+    """Every dependency edge must name an op_id present in this program,
+    op_ids must be unique, and no op may depend on itself.
 
     A dangling edge (a put from a previous host_sync segment, or a buggy
     pass emitting a stale op_id) would otherwise be silently treated as
     completed-at-t0 by the simulator and as a no-op tie by the compiled
-    executor."""
-    known = {n.op_id for n in prog.nodes}
+    executor; a duplicate op_id makes every edge naming it ambiguous,
+    and a self-dependency can never fire."""
+    known: set = set()
+    dup = []
+    for n in prog.nodes:
+        if n.op_id in known:
+            dup.append((n.kind, n.op_id))
+        known.add(n.op_id)
+    if dup:
+        raise ValueError(
+            f"duplicate op_ids: {dup[:5]}{'...' if len(dup) > 5 else ''}"
+            " — dependency edges naming them are ambiguous")
+    selfdep = [(n.kind, n.label or n.op_id)
+               for n in prog.nodes if n.op_id in n.deps]
+    if selfdep:
+        raise ValueError(
+            f"self-dependencies: {selfdep[:5]}"
+            f"{'...' if len(selfdep) > 5 else ''} — an op gated on its "
+            "own completion never fires")
     bad = [(n.kind, n.label or n.op_id, d)
            for n in prog.nodes for d in n.deps if d not in known]
     if bad:
@@ -615,7 +672,8 @@ def schedule(prog: TriggeredProgram, *, throttle: str = "adaptive",
              node_aware: bool = False,
              coalesce: bool = False,
              pack: bool = False,
-             chunk_bytes: int = 0) -> TriggeredProgram:
+             chunk_bytes: int = 0,
+             verify: bool = False) -> TriggeredProgram:
     """Apply all schedule passes; returns the same (mutated) program.
 
     ``pack`` runs after the ordering pass (P2P chains gate every put, so
@@ -629,7 +687,13 @@ def schedule(prog: TriggeredProgram, *, throttle: str = "adaptive",
     runs after throttling (it must respect every dependency edge the
     earlier passes placed) and before stream assignment (the
     cross-stream conflict edges are derived from the final emission
-    order)."""
+    order).
+
+    ``verify=True`` additionally runs the static verifier
+    (:mod:`repro.core.verify`) over the finished schedule and raises
+    :class:`repro.core.verify.ScheduleVerificationError` on any
+    error-severity finding (race, unsatisfiable wait, slot overflow,
+    malformed descriptor, ...)."""
     prog = fuse_signals(prog, merged)
     prog = ordering_pass(prog, ordered)
     prog = pack_puts(prog, pack)
@@ -638,6 +702,9 @@ def schedule(prog: TriggeredProgram, *, throttle: str = "adaptive",
     prog = node_aware_pass(prog, node_aware, coalesce)
     prog = assign_streams(prog, nstreams)
     prog = validate_deps(prog)
+    if verify:
+        from repro.core.verify import verify as _verify
+        _verify(prog).raise_if_errors()
     return prog
 
 

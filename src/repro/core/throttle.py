@@ -78,7 +78,7 @@ from __future__ import annotations
 
 from collections import defaultdict
 from dataclasses import dataclass
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.triggered import TriggeredProgram
 
@@ -102,7 +102,7 @@ class CostModel:
             return self.put_base, self.put_per_kb
         return self.inter_base, self.inter_per_kb
 
-    def t_put(self, link, nbytes: int = None) -> float:
+    def t_put(self, link, nbytes: Optional[int] = None) -> float:
         """Alpha-beta put latency. ``t_put("inter", b)`` prices a link;
         the pre-topology single-argument form ``t_put(b)`` still works
         and prices the intra-node link."""
@@ -112,7 +112,7 @@ class CostModel:
         return alpha + beta * nbytes / 1024.0
 
 
-def simulate_program(prog: TriggeredProgram, cm: CostModel = None,
+def simulate_program(prog: TriggeredProgram, cm: Optional[CostModel] = None,
                      host_orchestrated: bool = False) -> float:
     """Critical-path completion time (us) of one scheduled program."""
     cm = cm or CostModel()
@@ -229,7 +229,7 @@ def simulate_program(prog: TriggeredProgram, cm: CostModel = None,
 
 
 def simulate_pipeline(progs: Sequence[TriggeredProgram],
-                      cm: CostModel = None,
+                      cm: Optional[CostModel] = None,
                       host_orchestrated: bool = False) -> float:
     """Total time of a host_sync-split program pipeline: each segment is
     its own device program followed by a full host block (the final
@@ -264,7 +264,7 @@ def faces_programs(niter: int, n=(8, 8, 8), grid=(2, 2, 2), *,
 def simulate_faces(niter: int, n=(8, 8, 8), *, policy: str = "adaptive",
                    resources: int = 16, merged: bool = True,
                    ordered: bool = False, host_orchestrated: bool = False,
-                   cm: CostModel = None) -> float:
+                   cm: Optional[CostModel] = None) -> float:
     """Derived critical-path time of the Faces inner loop under a policy
     (see :func:`repro.core.patterns.simulate_pattern` for the
     application-split semantics and the Fig. 13 ordering argument)."""

@@ -1,0 +1,205 @@
+"""Static schedule verifier (core/verify.py) + seeded-defect corpus
+(core/defects.py).
+
+The verifier's contract has two directions and both are tested here:
+every clean schedule the repo can emit (all four patterns x the autotune
+quick search space) must verify with ZERO findings, and every seeded
+defect class must be caught with the right finding kind and a witness.
+Also covers the hardened ``validate_deps`` (self-deps, duplicate
+op_ids), the ``schedule(verify=True)`` raise path, the shared cycle
+finder, and ``stream_interleaved_order``'s witness cycle."""
+import pytest
+
+from repro.core import (ScheduleVerificationError, find_cycle,
+                        pattern_programs, verify, verify_programs)
+from repro.core.autotune import search_space
+from repro.core.defects import MUTATIONS, run_mutation
+from repro.core.schedule import (schedule, stream_interleaved_order,
+                                 validate_deps)
+from repro.core.triggered import TriggeredOp, TriggeredProgram
+from repro.core.verify import (_CLI_BUILD, _CLI_GRIDS, _CLI_RPN,
+                               ALL_KINDS, VerifyReport)
+
+
+def _op(i, deps=(), stream=0, kind="kernel"):
+    return TriggeredOp(kind=kind, op_id=i, deps=tuple(deps),
+                       stream=stream)
+
+
+def _prog(nodes):
+    return TriggeredProgram(nodes=nodes)
+
+
+# ---------------------------------------------------------------------------
+# clean direction: the whole quick knob space verifies with zero findings
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pattern", ["faces", "ring", "a2a", "broadcast"])
+def test_quick_space_verifies_clean(pattern):
+    """Verifier-clean is a property of the whole schedule knob space,
+    not of one config: every quick search-space point of every pattern
+    (the same grid the CLI uses — node mapping on, so pack/chunk/
+    node_aware/multicast all have work) produces zero findings."""
+    grid, rpn = _CLI_GRIDS[pattern], _CLI_RPN[pattern]
+    dirty = []
+    for cfg in search_space(pattern, rpn, full=False):
+        report = verify_programs(pattern_programs(
+            pattern, 3, grid=grid, ranks_per_node=rpn, config=cfg,
+            **_CLI_BUILD.get(pattern, {})))
+        if report.findings:
+            dirty.append((cfg.label(), report.summary()))
+    assert not dirty, dirty[:3]
+
+
+def test_both_executors_schedules_verify_clean():
+    """The host baseline reshapes the schedule (throttle=none, unmerged
+    signals, one stream) — what run_host executes must verify clean
+    too, not just the ST executor's schedule."""
+    for pattern in ("faces", "ring"):
+        progs = pattern_programs(
+            pattern, 3, grid=_CLI_GRIDS[pattern],
+            ranks_per_node=_CLI_RPN[pattern], throttle="none",
+            merged=False, nstreams=1, **_CLI_BUILD.get(pattern, {}))
+        report = verify_programs(progs)
+        assert not report.findings, report.summary()
+
+
+# ---------------------------------------------------------------------------
+# dirty direction: every seeded defect class is caught, with a witness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mutation", MUTATIONS, ids=lambda m: m.name)
+def test_mutation_caught_with_right_kind(mutation):
+    report, touched = run_mutation(mutation)   # asserts clean baseline
+    hits = [f for f in report.findings if f.kind == mutation.expected_kind]
+    assert hits, (f"{mutation.name}: expected {mutation.expected_kind}, "
+                  f"got {report.kinds()}")
+    f = hits[0]
+    assert f.severity == "error"
+    assert f.op_ids and f.witness and f.message
+    assert f.kind in ALL_KINDS
+
+
+def test_mutation_witness_names_touched_op():
+    """The finding must localize the defect: for the threshold
+    corruptions the mutated wait itself appears in the finding."""
+    for m in MUTATIONS:
+        if m.name not in ("corrupt-expected-puts", "phantom-expected-puts"):
+            continue
+        report, touched = run_mutation(m)
+        hit = next(f for f in report.findings
+                   if f.kind == m.expected_kind)
+        assert set(touched) & set(hit.op_ids)
+
+
+# ---------------------------------------------------------------------------
+# schedule(verify=True) wiring
+# ---------------------------------------------------------------------------
+
+def _raw_ring_segment():
+    from repro.core.lower import lower_segment, split_segments
+    from repro.core.patterns import get_pattern
+    from repro.core.stream import STStream
+
+    p = get_pattern("ring")
+    stream = STStream(None, p.grid_axes, grid_shape=(4,))
+    p.build(stream, 2, merged=True, double_buffer=False,
+            ranks_per_node=None, batch=1, seq_per_rank=8, heads=2,
+            head_dim=8)
+    seg = split_segments(stream.program)[0]
+    return lower_segment(stream, seg)
+
+
+def test_schedule_verify_kwarg_clean():
+    prog = schedule(_raw_ring_segment(), nstreams=2, verify=True)
+    assert prog.nodes
+
+
+def test_schedule_verify_kwarg_raises_on_defect():
+    prog = schedule(_raw_ring_segment(), nstreams=2)
+    wait = next(n for n in prog.nodes
+                if n.kind == "wait" and n.expected_puts > 0)
+    wait.expected_puts += 1
+    report = verify(prog)
+    assert "unsatisfiable-wait" in report.kinds()
+    with pytest.raises(ScheduleVerificationError,
+                       match="unsatisfiable-wait"):
+        report.raise_if_errors()
+
+
+def test_report_merge_and_summary():
+    r1, r2 = verify(_raw_ring_segment()), VerifyReport()
+    assert r1.ok and "clean" in r1.summary()
+    merged = r2.merge(r1)
+    assert merged.checked.get("nodes") == r1.checked["nodes"]
+
+
+# ---------------------------------------------------------------------------
+# validate_deps hardening (satellite): self-deps + duplicate op_ids
+# ---------------------------------------------------------------------------
+
+def test_validate_deps_rejects_self_dependency():
+    with pytest.raises(ValueError, match="self-dep"):
+        validate_deps(_prog([_op(0), _op(1, deps=(1,))]))
+
+
+def test_validate_deps_rejects_duplicate_op_ids():
+    with pytest.raises(ValueError, match="duplicate op_id"):
+        validate_deps(_prog([_op(0), _op(0)]))
+
+
+def test_validate_deps_rejects_dangling_edges():
+    with pytest.raises(ValueError, match="dangling"):
+        validate_deps(_prog([_op(0, deps=(99,))]))
+
+
+def test_validate_deps_accepts_clean_program():
+    p = _prog([_op(0), _op(1, deps=(0,))])
+    assert validate_deps(p) is p
+
+
+# ---------------------------------------------------------------------------
+# shared cycle finder + stream_interleaved_order witness (satellite)
+# ---------------------------------------------------------------------------
+
+def test_find_cycle_acyclic_returns_none():
+    succ = {0: [1], 1: [2], 2: []}
+    assert find_cycle(succ, lambda v: succ[v]) is None
+
+
+def test_find_cycle_returns_closed_witness():
+    succ = {0: [1], 1: [2], 2: [1], 3: []}
+    cyc = find_cycle(succ, lambda v: succ[v])
+    assert cyc is not None and cyc[0] == cyc[-1]
+    assert set(cyc) == {1, 2}
+
+
+def test_stream_interleaved_order_names_witness_cycle():
+    # two streams, heads mutually dependent: classic emission deadlock
+    prog = _prog([_op(0, stream=0, deps=(1,)), _op(1, stream=1, deps=(0,))])
+    with pytest.raises(RuntimeError, match="witness cycle"):
+        stream_interleaved_order(prog)
+    try:
+        stream_interleaved_order(prog)
+    except RuntimeError as e:
+        assert "kernel#0" in str(e) and "kernel#1" in str(e)
+
+
+def test_stream_interleaved_order_still_orders_dags():
+    prog = _prog([_op(0, stream=0), _op(1, stream=1, deps=(0,)),
+                  _op(2, stream=0, deps=(1,))])
+    order = [n.op_id for n in stream_interleaved_order(prog)]
+    assert sorted(order) == [0, 1, 2]
+    assert order.index(0) < order.index(1) < order.index(2)
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke
+# ---------------------------------------------------------------------------
+
+def test_cli_single_pattern_clean(capsys):
+    from repro.core.verify import main
+
+    rc = main(["--pattern", "ring", "--nstreams", "2", "--niter", "2"])
+    out = capsys.readouterr().out
+    assert rc == 0 and "clean" in out
