@@ -100,6 +100,12 @@ def main():
                     help="faces: block edge; ring: seq per rank; a2a: seq")
     ap.add_argument("--niter", type=int, default=10)
     ap.add_argument("--mode", default="st", choices=["st", "host"])
+    ap.add_argument("--exec", dest="exec_", default="",
+                    choices=["", "st", "host", "fused"],
+                    help="executor override: 'fused' runs the "
+                         "device-resident progress engine (segment "
+                         "planner + fused per-segment emission); empty "
+                         "defers to --mode")
     ap.add_argument("--throttle", default="adaptive")
     ap.add_argument("--merged", type=int, default=1)
     ap.add_argument("--ordered", type=int, default=0,
@@ -147,6 +153,10 @@ def main():
     ap.add_argument("--verify_multicast", type=int, default=0,
                     help="also run the unicast-fanout program and "
                          "require bit-identical pattern outputs")
+    ap.add_argument("--verify_fused", type=int, default=0,
+                    help="also run the compiled ST executor over the "
+                         "unfused schedule and require bit-identical "
+                         "pattern outputs vs the fused progress engine")
     ap.add_argument("--config", default="",
                     help="tuned schedule config: 'auto' consults the "
                          "tuned cache (autotuning on a miss) under the "
@@ -171,6 +181,7 @@ def main():
                     help="also write a {name}.json record (descriptor "
                          "stats + timings) into this directory")
     args = ap.parse_args()
+    mode = args.exec_ or args.mode
 
     grid = tuple(int(x) for x in args.grid.split(","))
     ndev = 1
@@ -181,7 +192,8 @@ def main():
 
     import time
     from repro.core import STStream, get_pattern
-    from repro.core.throttle import CostModel, simulate_pipeline
+    from repro.core.throttle import (CostModel, host_dispatch_count,
+                                     simulate_pipeline)
     from repro.launch.mesh import make_mesh
 
     pat = get_pattern(args.pattern)
@@ -227,7 +239,11 @@ def main():
                           coalesce=bool(args.coalesce),
                           pack=bool(args.pack),
                           chunk_bytes=args.chunk_bytes)
-    if args.mode == "host":
+    if mode == "fused":
+        # the progress engine needs the segment planner's metadata on
+        # the scheduled program regardless of where the config came from
+        sched_opts["fused"] = True
+    if mode == "host":
         # the host baseline has no runtime throttling engine — its
         # resource reclaim is the blocking per-op dispatch itself.
         # Schedule (and therefore simulate) exactly what run_host
@@ -242,7 +258,7 @@ def main():
     nstreams = sched_opts["nstreams"]
 
     def run_once(st):
-        return stream.synchronize(st, mode=args.mode, donate=False,
+        return stream.synchronize(st, mode=mode, donate=False,
                                   **sched_opts)
 
     verify_findings = None
@@ -274,14 +290,14 @@ def main():
     progs = stream.scheduled_programs(**sched_opts)
     derived = simulate_pipeline(
         progs, CostModel(),
-        host_orchestrated=(args.mode == "host")) / args.niter
+        host_orchestrated=(mode == "host")) / args.niter
 
     if args.verify_overlap:
         # the overlapped schedule must not change a single output bit vs
         # the single-stream schedule on a single-buffered window (the
         # overlapped run reuses this worker's compiled executable)
         got_state = stream.synchronize(
-            seeded_state(stream, win, args.pattern, 0), mode=args.mode,
+            seeded_state(stream, win, args.pattern, 0), mode=mode,
             donate=False, **sched_opts)
         ref_stream = STStream(mesh, pat.grid_axes)
         ref_win, _ = pat.build(ref_stream, args.niter,
@@ -290,7 +306,7 @@ def main():
                                **build_kwargs(args, ndev))
         ref_state = ref_stream.synchronize(
             seeded_state(ref_stream, ref_win, args.pattern, 0),
-            mode=args.mode, donate=False, **dict(sched_opts, nstreams=1))
+            mode=mode, donate=False, **dict(sched_opts, nstreams=1))
         verify_outputs(args.pattern, "overlap", got_state, win,
                        ref_state, ref_win)
         print(f"# overlap-verified {args.pattern} nstreams={nstreams} "
@@ -304,10 +320,10 @@ def main():
             sys.exit("--verify_node_aware without --node_aware compares "
                      "the naive schedule against itself")
         got_state = stream.synchronize(
-            seeded_state(stream, win, args.pattern, 0), mode=args.mode,
+            seeded_state(stream, win, args.pattern, 0), mode=mode,
             donate=False, **sched_opts)
         naive_state = stream.synchronize(
-            seeded_state(stream, win, args.pattern, 0), mode=args.mode,
+            seeded_state(stream, win, args.pattern, 0), mode=mode,
             donate=False,
             **dict(sched_opts, node_aware=False, coalesce=False))
         verify_outputs(args.pattern, "node-aware", got_state, win,
@@ -325,10 +341,10 @@ def main():
             sys.exit("--verify_pack without --pack compares the unpacked "
                      "schedule against itself")
         got_state = stream.synchronize(
-            seeded_state(stream, win, args.pattern, 1), mode=args.mode,
+            seeded_state(stream, win, args.pattern, 1), mode=mode,
             donate=False, **sched_opts)
         ref_state = stream.synchronize(
-            seeded_state(stream, win, args.pattern, 1), mode=args.mode,
+            seeded_state(stream, win, args.pattern, 1), mode=mode,
             donate=False, **dict(sched_opts, pack=False))
         verify_outputs(args.pattern, "packed", got_state, win,
                        ref_state, win)
@@ -347,10 +363,10 @@ def main():
             sys.exit("--verify_chunk without --chunk_bytes compares the "
                      "monolithic schedule against itself")
         got_state = stream.synchronize(
-            seeded_state(stream, win, args.pattern, 2), mode=args.mode,
+            seeded_state(stream, win, args.pattern, 2), mode=mode,
             donate=False, **sched_opts)
         ref_state = stream.synchronize(
-            seeded_state(stream, win, args.pattern, 2), mode=args.mode,
+            seeded_state(stream, win, args.pattern, 2), mode=mode,
             donate=False, **dict(sched_opts, chunk_bytes=0))
         verify_outputs(args.pattern, "chunked", got_state, win,
                        ref_state, win)
@@ -369,7 +385,7 @@ def main():
             sys.exit("--verify_multicast needs --pattern broadcast "
                      "--multicast 1")
         got_state = stream.synchronize(
-            seeded_state(stream, win, args.pattern, 3), mode=args.mode,
+            seeded_state(stream, win, args.pattern, 3), mode=mode,
             donate=False, **sched_opts)
         ref_stream = STStream(mesh, pat.grid_axes)
         ref_win, _ = pat.build(
@@ -378,7 +394,7 @@ def main():
             **dict(build_kwargs(args, ndev), multicast=False))
         ref_state = ref_stream.synchronize(
             seeded_state(ref_stream, ref_win, args.pattern, 3),
-            mode=args.mode, donate=False, **sched_opts)
+            mode=mode, donate=False, **sched_opts)
         verify_outputs(args.pattern, "multicast", got_state, win,
                        ref_state, ref_win)
         if not any(prog.multicast_puts() for prog in progs):
@@ -396,7 +412,7 @@ def main():
             sys.exit("--verify_tuned needs --config (auto or an explicit "
                      "ScheduleConfig JSON)")
         got_state = stream.synchronize(
-            seeded_state(stream, win, args.pattern, 4), mode=args.mode,
+            seeded_state(stream, win, args.pattern, 4), mode=mode,
             donate=False, **sched_opts)
         ref_stream = STStream(mesh, pat.grid_axes)
         ref_win, _ = pat.build(ref_stream, args.niter,
@@ -412,21 +428,47 @@ def main():
                         coalesce=bool(args.coalesce),
                         pack=bool(args.pack),
                         chunk_bytes=args.chunk_bytes)
-        if args.mode == "host":
+        if mode == "host":
             ref_opts.update(throttle="none", merged=False, nstreams=1)
         ref_state = ref_stream.synchronize(
             seeded_state(ref_stream, ref_win, args.pattern, 4),
-            mode=args.mode, donate=False, **ref_opts)
+            mode=mode, donate=False, **ref_opts)
         verify_outputs(args.pattern, "tuned", got_state, win,
                        ref_state, ref_win)
         print(f"# tuned-verified {args.pattern} config={cfg.label()} "
-              f"mode={args.mode} outputs={VERIFY_OUTPUTS[args.pattern]}")
+              f"mode={mode} outputs={VERIFY_OUTPUTS[args.pattern]}")
+
+    if args.verify_fused:
+        # the fused progress engine (segment planner + per-segment
+        # fused emission) must not change a single output bit vs the
+        # compiled ST executor walking the unfused schedule
+        got_state = stream.synchronize(
+            seeded_state(stream, win, args.pattern, 5), mode="fused",
+            donate=False, **dict(sched_opts, fused=True))
+        ref_state = stream.synchronize(
+            seeded_state(stream, win, args.pattern, 5), mode="st",
+            donate=False, **dict(sched_opts, fused=False))
+        verify_outputs(args.pattern, "fused", got_state, win,
+                       ref_state, win)
+        fprogs = stream.scheduled_programs(**dict(sched_opts, fused=True))
+        nseg = sum(p.meta.get("segments", 0) for p in fprogs)
+        if not nseg:
+            sys.exit("fused verification is vacuous: the segment "
+                     "planner produced no segments")
+        print(f"# fused-verified {args.pattern} nstreams={nstreams} "
+              f"segments={nseg} outputs={VERIFY_OUTPUTS[args.pattern]}")
 
     stats = progs[0].stats()
-    stats["segments"] = len(progs)
+    stats["programs"] = len(progs)
+    # planner segment count across the pipeline (0 unless fused), and
+    # the host-dispatch totals the progress engine trades against the
+    # per-op counts: fused schedules dispatch once per SEGMENT
+    stats["segments"] = sum(p.meta.get("segments", 0) for p in progs)
+    stats["ops"] = sum(len(p.nodes) for p in progs)
+    stats["host_dispatches"] = sum(host_dispatch_count(p) for p in progs)
     if verify_findings is not None:
         stats["verify_findings"] = verify_findings
-    name = args.name or (f"{args.pattern}_{args.mode}_{throttle}"
+    name = args.name or (f"{args.pattern}_{mode}_{throttle}"
                          f"_m{int(merged)}_o{args.ordered}_{ndev}r")
     print(f"{name},{us_per_iter:.1f},{derived:.2f}")
     print(f"#stats {name} pattern={stats['pattern']} "
@@ -438,12 +480,14 @@ def main():
           f"resource_high_water={stats['resource_high_water']} "
           f"critical_path_depth={stats['critical_path_depth']} "
           f"descriptors={stats['descriptors']} "
-          f"dep_edges={stats['dep_edges']}"
+          f"dep_edges={stats['dep_edges']} "
+          f"exec={mode} segments={stats['segments']} "
+          f"host_dispatches={stats['host_dispatches']}"
           + (f" verify_findings={verify_findings}"
              if verify_findings is not None else ""))
     if args.json_dir:
         os.makedirs(args.json_dir, exist_ok=True)
-        rec = dict(name=name, pattern=args.pattern, mode=args.mode,
+        rec = dict(name=name, pattern=args.pattern, mode=mode,
                    grid=list(grid), block=args.block, niter=args.niter,
                    us_per_iter=us_per_iter, derived_us_per_iter=derived,
                    double_buffer=double_buffer,

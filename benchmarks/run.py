@@ -31,6 +31,11 @@ Sections:
          bit-identical in-process
   broadcast  SUMMA-style row fanout: ONE multicast put descriptor vs
          the cols-1 unicast fanout, derived + executor verification
+  fused  device-resident progress engine (segment planner + fused
+         per-segment emission, core/engine.py): fused vs compiled
+         derived latency and host-dispatch counts per pattern, plus
+         executor workers running --exec fused with in-process
+         bit-identity verification against run_compiled
   autotune  simulator-guided schedule search (core/autotune.py): tuned
          vs default derived latency per pattern, winner cached in
          results/tuned.json, plus executor workers running
@@ -43,7 +48,7 @@ Worker failures are COUNTED and the harness exits nonzero (CI gates on
 this). ``--json PATH`` writes every parsed row + failures + invariant
 checks as one JSON record AND a repo-root ``<BENCH_ID>.json`` perf-
 trajectory record (row-name -> derived latency, rows, invariants; the
-id comes from ``--bench-id``/``$BENCH_ID``, default BENCH_7) that CI
+id comes from ``--bench-id``/``$BENCH_ID``, default BENCH_9) that CI
 uploads — and diffs against the previous PR's record via
 ``scripts/check_trajectory.py`` — so regressions in derived numbers
 show up as a one-line diff instead of flying blind;
@@ -59,8 +64,11 @@ node topologies, packed descriptor counts exactly as the group
 structure predicts), the chunk-pipeline rule (chunked derived latency
 STRICTLY below monolithic at the large-message off-node points), the
 multicast rule (one multicast descriptor strictly below the
-unicast fanout), and the autotune rule (the searched config's derived
-latency <= the default config's) for every ST pattern. ``BENCH_SMOKE=1``
+unicast fanout), the autotune rule (the searched config's derived
+latency <= the default config's), and the progress-engine rules (fused
+derived latency <= compiled, per-segment host-dispatch counts strictly
+below per-op counts for every multi-epoch pattern) for every ST
+pattern. ``BENCH_SMOKE=1``
 keeps only the small-grid configs (CI), ``BENCH_NITER`` overrides
 iterations per worker.
 """
@@ -505,6 +513,79 @@ def broadcast():
             name="broadcast_mcast_host")
 
 
+_FUSED_GRIDS = {"faces": (2, 2, 2), "ring": (4,), "a2a": (4,),
+                "broadcast": (2, 4)}
+_FUSED_RPN = {"faces": 4, "ring": 2, "a2a": 2, "broadcast": 2}
+_FUSED_KW = {"faces": dict(n=(4, 4, 4)), "ring": dict(seq_per_rank=16),
+             "a2a": dict(seq=16), "broadcast": dict(tile=16)}
+_FUSED_CACHE = None
+
+
+def _fused_points():
+    """Device-free fused-vs-compiled derived costs and host-dispatch
+    counts per pattern (adaptive R=8, nstreams=2 so the segment planner
+    has cross-stream structure to partition; niter=3 makes every
+    pattern multi-epoch)."""
+    global _FUSED_CACHE
+    if _FUSED_CACHE is not None:
+        return _FUSED_CACHE
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.core.patterns import pattern_programs
+    from repro.core.throttle import (CostModel, host_dispatch_count,
+                                     simulate_pipeline)
+
+    niter = 3
+    out = []
+    for pat, grid in _FUSED_GRIDS.items():
+        common = dict(grid=grid, throttle="adaptive", resources=8,
+                      ranks_per_node=_FUSED_RPN[pat], nstreams=2,
+                      **_FUSED_KW[pat])
+        base = pattern_programs(pat, niter, **common)
+        fus = pattern_programs(pat, niter, fused=True, **common)
+        out.append(dict(
+            pattern=pat,
+            compiled=simulate_pipeline(base, CostModel()) / niter,
+            fused=simulate_pipeline(fus, CostModel()) / niter,
+            ops=sum(len(p.nodes) for p in base),
+            dispatches=sum(host_dispatch_count(p) for p in fus),
+            segments=sum(p.meta.get("segments", 0) for p in fus)))
+    _FUSED_CACHE = out
+    return out
+
+
+def fused():
+    """Device-resident progress engine: fused per-segment emission
+    (core/engine.py run_fused) vs the compiled ST executor — derived
+    rows and host-dispatch counts per pattern, plus executor workers
+    running --exec fused with in-process bit-identity verification
+    against run_compiled."""
+    print("# fused: device-resident progress engine vs compiled ST "
+          "(adaptive R=8, nstreams=2)")
+    for p in _fused_points():
+        for variant, derived in (("compiled", p["compiled"]),
+                                 ("fused", p["fused"])):
+            RESULTS.append(dict(
+                section="fused", name=f"fused_{p['pattern']}_{variant}",
+                us_per_call=0.0, derived=derived, nstreams=2,
+                double_buffer=False, pattern=p["pattern"],
+                ranks_per_node=_FUSED_RPN[p["pattern"]],
+                node_aware=False, coalesce=False, pack=False,
+                chunk_bytes=0, fused=(variant == "fused"),
+                segments=p["segments"],
+                host_dispatches=(p["dispatches"] if variant == "fused"
+                                 else p["ops"])))
+            print(f"fused_{p['pattern']}_{variant},0.0,{derived:.2f}")
+        print(f"# fused {p['pattern']}: segments={p['segments']} "
+              f"host_dispatches {p['ops']} -> {p['dispatches']}")
+    _worker("fused", grid="2,2,2", block=4, exec="fused", nstreams=2,
+            throttle="adaptive", merged=1, resources=8, verify_fused=1,
+            name="fused_faces_exec")
+    _worker("fused", pattern="broadcast", grid="2,4", block=16,
+            exec="fused", nstreams=2, throttle="adaptive", merged=1,
+            resources=8, ranks_per_node=2, multicast=1, verify_fused=1,
+            name="fused_broadcast_exec")
+
+
 # the tuned-config grid: one representative (pattern, topology, size)
 # point per pattern. Size tokens ("b4") name the message size in the
 # tuned-cache key, matching the worker's --block so run.py and
@@ -736,6 +817,36 @@ def check_invariants():
     checks += check_topology_invariants()
     checks += check_chunk_invariants()
     checks += check_autotune_invariants()
+    checks += check_fused_invariants()
+    return checks
+
+
+def check_fused_invariants():
+    """Progress-engine invariants: the fused schedule's derived latency
+    never exceeds the compiled executor's over the identical DAG
+    (per-segment host dispatch can only remove host-timeline work), and
+    the per-segment host-dispatch count is STRICTLY below the per-op
+    count for every multi-epoch pattern — the host-overhead win the
+    paper attributes to fully offloaded progress."""
+    eps = 1e-9
+    checks = []
+    print("# invariants: fused <= compiled per pattern; per-segment "
+          "host dispatches < per-op dispatches")
+    for p in _fused_points():
+        ok = p["fused"] <= p["compiled"] + eps
+        checks.append(dict(rule="fused_latency", pattern=p["pattern"],
+                           ok=ok, fused=p["fused"],
+                           compiled=p["compiled"]))
+        print(f"# invariant fused {p['pattern']}: "
+              f"fused={p['fused']:.2f} <= compiled={p['compiled']:.2f} "
+              f"-> {'OK' if ok else 'VIOLATED'}")
+        ok2 = p["dispatches"] < p["ops"]
+        checks.append(dict(rule="fused_dispatch", pattern=p["pattern"],
+                           ok=ok2, host_dispatches=p["dispatches"],
+                           ops=p["ops"], segments=p["segments"]))
+        print(f"# invariant fused_dispatch {p['pattern']}: "
+              f"{p['dispatches']} dispatch(es) < {p['ops']} op(s) -> "
+              f"{'OK' if ok2 else 'VIOLATED'}")
     return checks
 
 
@@ -936,7 +1047,8 @@ SECTIONS = {
     "fig12": fig12, "fig13": fig13, "fig14": fig14, "fig15": fig15,
     "fig16_17": fig16_17, "ring": ring, "a2a": a2a, "overlap": overlap,
     "sweep": sweep, "pack": pack, "chunk": chunk, "broadcast": broadcast,
-    "autotune": autotune, "roofline": roofline, "throughput": throughput,
+    "fused": fused, "autotune": autotune, "roofline": roofline,
+    "throughput": throughput,
 }
 
 
@@ -952,7 +1064,7 @@ def main() -> None:
                          "overlapped <= single-stream on derived costs "
                          "for every ST pattern")
     ap.add_argument("--bench-id",
-                    default=os.environ.get("BENCH_ID", "BENCH_7"),
+                    default=os.environ.get("BENCH_ID", "BENCH_9"),
                     help="basename of the repo-root perf-trajectory "
                          "record --json also writes (env: BENCH_ID)")
     args = ap.parse_args()

@@ -1,7 +1,8 @@
 """The paper's primary contribution: stream-triggered (ST) communication
 for JAX/TPU — a three-stage compiler pipeline over a triggered-op IR
-(lower -> schedule passes -> three backends: compiled ST executor,
-host-orchestrated baseline, cost simulator), deferred-execution op
+(lower -> schedule passes -> four consumers: compiled ST executor,
+host-orchestrated baseline, fused device-resident progress engine,
+cost simulator), deferred-execution op
 queues, chained completion signals, throttling, merged kernels, and the
 Faces nearest-neighbor halo exchange; plus the training-side
 integrations (overlapped grad reduction, ring attention transport, EP
@@ -16,10 +17,13 @@ from repro.core.patterns import (PatternTopology, STPattern,
                                  available_patterns, build_pattern,
                                  get_pattern, pattern_programs,
                                  register_pattern, simulate_pattern)
-from repro.core.schedule import (assign_streams, chunk_puts,
-                                 node_aware_pass, pack_puts, schedule,
+from repro.core.schedule import (Segment, SegmentPlan, assign_streams,
+                                 chunk_puts, node_aware_pass, pack_puts,
+                                 plan_segments, schedule,
                                  stream_interleaved_order, validate_deps)
-from repro.core.throttle import (CostModel, faces_programs, simulate_faces,
+from repro.core.engine import emit_node, fused_order, run_fused
+from repro.core.throttle import (CostModel, faces_programs,
+                                 host_dispatch_count, simulate_faces,
                                  simulate_pipeline, simulate_program)
 from repro.core.autotune import (AutotuneResult, ScheduleConfig, autotune,
                                  resolve_config, search_space, tuned_config)
@@ -36,6 +40,9 @@ __all__ = ["STStream", "STWindow", "TriggeredOp", "TriggeredProgram",
            "counters_expected", "lower_segment", "split_segments",
            "schedule", "assign_streams", "node_aware_pass", "pack_puts",
            "chunk_puts", "stream_interleaved_order",
+           "plan_segments", "Segment", "SegmentPlan",
+           "run_fused", "fused_order", "emit_node",
+           "host_dispatch_count",
            "validate_deps", "register_pattern", "get_pattern",
            "available_patterns", "build_pattern", "pattern_programs",
            "simulate_pattern", "simulate_program", "simulate_pipeline",

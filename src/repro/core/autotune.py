@@ -62,6 +62,12 @@ class ScheduleConfig:
     builder consumes the knob at all); ``double_buffer`` and
     ``multicast`` are build-time — they are excluded from
     ``sched_kwargs()`` and surfaced via ``build_overrides()``.
+
+    ``fused`` selects the device-resident progress engine (segment
+    planner + fused per-segment emission; the simulator charges host
+    dispatch per segment). Tuned-cache entries persisted before the
+    knob existed simply lack the key and default to False through
+    :meth:`from_dict` — no cache migration needed.
     """
     throttle: str = "adaptive"
     resources: int = 16
@@ -74,6 +80,7 @@ class ScheduleConfig:
     pack: bool = False
     chunk_bytes: int = 0
     multicast: Optional[bool] = None
+    fused: bool = False
 
     def sched_kwargs(self) -> dict:
         """The schedule-pass knobs (STStream.scheduled_programs kwargs)."""
@@ -81,7 +88,7 @@ class ScheduleConfig:
                     merged=self.merged, ordered=self.ordered,
                     nstreams=self.nstreams, node_aware=self.node_aware,
                     coalesce=self.coalesce, pack=self.pack,
-                    chunk_bytes=self.chunk_bytes)
+                    chunk_bytes=self.chunk_bytes, fused=self.fused)
 
     def build_overrides(self) -> dict:
         """The build-time knobs (require re-enqueueing the program)."""
@@ -116,6 +123,8 @@ class ScheduleConfig:
             bits.append(f"c{self.chunk_bytes}")
         if self.multicast is not None:
             bits.append("mc" if self.multicast else "uni")
+        if self.fused:
+            bits.append("fused")
         return "+".join(bits)
 
 
@@ -136,8 +145,18 @@ def search_space(pattern: str, ranks_per_node: Optional[int] = None, *,
       * multicast only enumerated for the broadcast pattern (the only
         builder with the knob); elsewhere it stays None;
       * coalesce stays off — pack materializes the same aggregation as
-        real descriptors, which both executors honor.
+        real descriptors, which both executors honor;
+      * fused (the device-resident progress engine) enumerated only
+        when the installed JAX supports a fused emission path
+        (``compat.supports_fused`` — imported lazily so this module
+        stays jax-free); installations without it prune the knob
+        instead of erroring mid-search.
     """
+    try:
+        from repro.core.compat import supports_fused
+        fuseds = (False, True) if supports_fused() else (False,)
+    except Exception:           # noqa: BLE001 — no jax: prune the knob
+        fuseds = (False,)
     throttles = ("adaptive", "static")
     res = tuple(r for r in ((4, 8, 16) if full else (8, 16))
                 if r <= max_resources) or (max_resources,)
@@ -155,11 +174,13 @@ def search_space(pattern: str, ranks_per_node: Optional[int] = None, *,
                         for pk in bools:
                             for cb in chunks:
                                 for mc in mcasts:
-                                    out.append(ScheduleConfig(
-                                        throttle=throttle, resources=r,
-                                        nstreams=ns, double_buffer=db,
-                                        node_aware=na, pack=pk,
-                                        chunk_bytes=cb, multicast=mc))
+                                    for fu in fuseds:
+                                        out.append(ScheduleConfig(
+                                            throttle=throttle, resources=r,
+                                            nstreams=ns, double_buffer=db,
+                                            node_aware=na, pack=pk,
+                                            chunk_bytes=cb, multicast=mc,
+                                            fused=fu))
     return out
 
 

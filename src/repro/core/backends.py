@@ -1,8 +1,14 @@
-"""Stage 3 — executors: emit a scheduled descriptor DAG on the mesh.
+"""Stage 3 — legacy executors: thin consumers of the shared emitter.
 
-Both executors walk the SAME :class:`TriggeredProgram` the schedule
-passes produced (the third consumer is the cost simulator in
-:mod:`repro.core.throttle`):
+FOUR consumers walk the SAME :class:`TriggeredProgram` the schedule
+passes produced: the two executors here, the device-resident progress
+engine (:func:`repro.core.engine.run_fused` — one fused emission unit
+per planned segment, host involvement per SEGMENT not per op), and the
+cost simulator in :mod:`repro.core.throttle`. The descriptor-emission
+implementation itself — ``emit_node``, its ``_EmitCtx`` trace state,
+and the completion-signal helpers — lives in :mod:`repro.core.engine`;
+this module only decides WHEN emission happens and what the host does
+between emissions:
 
   * :func:`run_compiled` (Fig. 9b, mode="st"): the whole program (all
     iterations) is traced into ONE jitted shard_map call — the TPU
@@ -15,8 +21,11 @@ passes produced (the third consumer is the cost simulator in
     standard active-RMA baseline — one jitted dispatch per descriptor,
     host blocking at every epoch boundary (start/complete/wait). Wire
     completion signals dispatch separately from their payload put, like
-    the MPI runtime's completion handling; dependency edges are implicit
-    in the serialized dispatch order and are not re-emitted.
+    the MPI runtime's completion handling; dependency edges are NOT
+    re-emitted — the serialized dispatch order must satisfy them, and
+    :func:`_assert_dispatch_order` proves it does before the first
+    dispatch (a forward edge raises with a ``verify.find_cycle``
+    witness instead of being silently ignored).
 
 Packed multi-buffer descriptors (schedule.pack_puts) are ONE node and
 therefore one emission unit in both executors: run_compiled traces
@@ -37,235 +46,15 @@ puts (paper §3.1–3.2), so tests can assert the epoch protocol.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
-
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.compat import shard_map
+# the shared emitter stack moved to repro.core.engine in the progress-
+# engine refactor; the names stay importable here for existing callers
+from repro.core.engine import (_arrival_mask, _emit_completion_signal,  # noqa: F401
+                               _EmitCtx, _local_rank, _ppermute, _tie,
+                               emit_node)
 from repro.core.schedule import stream_interleaved_order
-from repro.core.window import is_counter_name
-from repro.kernels.halo_pack.ref import (chunk_gather, chunk_scatter,
-                                         pack_flat, unpack_flat)
-
-
-def _tie(x, dep):
-    """Make x depend on dep without changing its value (dataflow edge)."""
-    if dep is None:
-        return x
-    x, _ = jax.lax.optimization_barrier((x, dep))
-    return x
-
-
-class _EmitCtx:
-    """Trace-local emission state: a completion/effect token per emitted
-    op_id (what dependency edges tie to) and the post-counter snapshot
-    each "start" takes, keyed by (window, epoch) so epochs of the same
-    window in flight on different streams never clobber each other."""
-
-    def __init__(self):
-        self.tokens: Dict[int, Any] = {}
-        self.trig: Dict[tuple, Any] = {}
-
-
-def _ppermute(stream, x, direction):
-    return jax.lax.ppermute(x, stream.grid_axes,
-                            stream.perm_for(tuple(direction)))
-
-
-def _local_rank(stream):
-    """Linear rank index inside shard_map — same strides as perm_for's
-    linearization (stream.rank_strides is the single definition)."""
-    idx = 0
-    for a, s in zip(stream.grid_axes, stream.rank_strides()):
-        idx = idx + jax.lax.axis_index(a) * s
-    return idx
-
-
-def _arrival_mask(stream, direction):
-    """1 where this rank RECEIVES a payload sent in ``direction`` —
-    non-periodic boundary ranks have no source and must not see a
-    completion bump. Memoized on the stream: the mask depends only on
-    the grid and direction, and rebuilding it per emitted put made
-    trace time scale with put count (packed puts make it hot — every
-    packed completion signal consults its group's mask)."""
-    cache = getattr(stream, "_arrival_mask_cache", None)
-    if cache is None:
-        cache = stream._arrival_mask_cache = {}
-    key = tuple(direction)
-    mask = cache.get(key)
-    if mask is None:
-        recv = np.zeros((stream.num_ranks,), np.int32)
-        for _, dst in stream.perm_for(key):
-            recv[dst] = 1
-        mask = cache[key] = recv
-    return mask
-
-
-def _emit_completion_signal(stream, node, st, arrival_token):
-    """§3.2 chained completion signal of a put descriptor. A multicast
-    put's chained signal is the completion TREE: one signal op whose
-    leaves bump each branch target's slot (``ch.slots``); unicast puts
-    have the single (slot, direction) leaf."""
-    ch = node.chained
-    branches = ch.slots or ((ch.slot, node.direction),)
-    if ch.wire:
-        # a second triggered put bumping the TARGET's comp counter over
-        # the wire, triggered by the payload's arrival
-        one = _tie(jnp.ones((1, 1), jnp.int32), arrival_token)
-        sig_buf = st[ch.counter]
-        for slot, d in branches:
-            sig = _ppermute(stream, one, d)
-            sig_buf = sig_buf.at[:, slot].add(sig[:, 0])
-        st[ch.counter] = sig_buf
-    else:
-        # merged/local bump: the arrived payload IS the completion event
-        one = _tie(jnp.ones((1,), jnp.int32), arrival_token)
-        sig_buf = st[ch.counter]
-        for slot, d in branches:
-            bump = one
-            if not stream.periodic:
-                # a boundary rank with no source in this direction
-                # received only the zero-fill, not a payload: no
-                # completion lands
-                mask = jnp.asarray(_arrival_mask(stream, d))
-                bump = bump * mask[_local_rank(stream)]
-            sig_buf = sig_buf.at[:, slot].add(bump)
-        st[ch.counter] = sig_buf
-    return st
-
-
-def emit_node(stream, node, st, ctx, *, with_chained=True):
-    """Apply one descriptor's state effect. Shared by both executors.
-
-    Every node leaves a tiny effect token in ``ctx.tokens`` so dependency
-    edges from ANY node kind (cross-stream conflict edges, throttle
-    edges) can be tied as dataflow."""
-    if node.kind == "kernel":
-        args = [st[r] for r in node.reads]
-        if args:
-            for dep in node.deps:
-                args[0] = _tie(args[0], ctx.tokens.get(dep))
-        outs = node.fn(*args)
-        if not isinstance(outs, (tuple, list)):
-            outs = (outs,)
-        for w, o in zip(node.writes, outs):
-            st[w] = o
-        if not args:
-            # write-only kernel: thread its dep edges through the outputs
-            for dep in node.deps:
-                for w in node.writes:
-                    st[w] = _tie(st[w], ctx.tokens.get(dep))
-        if node.writes:
-            ctx.tokens[node.op_id] = st[node.writes[0]].ravel()[:1]
-    elif node.kind == "signal" and node.role == "post":
-        sig = st[node.counter]
-        for dep in node.deps:
-            sig = _tie(sig, ctx.tokens.get(dep))
-        if node.fused:
-            # merged signal kernel (paper §5.4): one update for all peers
-            upd = jnp.zeros_like(sig)
-            for slot, d in node.slots:
-                arrived = _ppermute(stream, jnp.ones((1, 1), jnp.int32), d)
-                upd = upd.at[:, slot].add(arrived[:, 0])
-            sig = sig + upd
-        else:
-            arrived = _ppermute(stream, jnp.ones((1, 1), jnp.int32),
-                                node.direction)
-            sig = sig.at[:, node.slot].add(arrived[:, 0])
-        st[node.counter] = sig
-        ctx.tokens[node.op_id] = sig.ravel()[:1]
-    elif node.kind == "start":
-        # origin-side wait for exposure signals: the epoch's puts are
-        # armed by (tied to) the post counter as of this point
-        snap = st[node.counter]
-        for dep in node.deps:
-            snap = _tie(snap, ctx.tokens.get(dep))
-        ctx.trig[(node.window, node.epoch)] = snap
-        ctx.tokens[node.op_id] = snap.ravel()[:1]
-    elif node.kind == "put":
-        packed = len(node.srcs) > 1
-        chunked = node.chunk_count > 1
-        if chunked:
-            # one CHUNK of a pipelined chain (schedule.chunk_puts):
-            # gather only this chunk's element slice of the logical flat
-            # payload (the group concat for packed puts) — the staging
-            # slices of different chunks trace independently, so
-            # pack(k+1) overlaps wire(k) overlaps unpack(k-1) with no
-            # artificial barriers between chunks of different puts
-            parts = ([st[s] for s in node.srcs] if packed
-                     else [st[node.src]])
-            payload = chunk_gather(parts, node.chunk_offset,
-                                   node.chunk_elems)
-        elif packed:
-            # packed multi-buffer descriptor (schedule.pack_puts): pack
-            # the group's payloads into ONE contiguous staging buffer,
-            # ride ONE collective (every member shares the same rank
-            # permutation, so one ppermute moves the whole group), and
-            # unpack into the destination buffers on arrival — a pure
-            # byte reshuffle, bit-identical to the unpacked puts
-            payload = pack_flat([st[s] for s in node.srcs])
-        else:
-            payload = st[node.src]
-        payload = _tie(payload, ctx.trig.get((node.window, node.epoch)))
-        for dep in node.deps:
-            payload = _tie(payload, ctx.tokens.get(dep))
-        if node.mcast_dirs:
-            # multicast descriptor: the ONE traced payload fans out over
-            # every branch permutation (the executor analogue of switch
-            # replication) and lands in its branch's dst buffer; the
-            # single chained signal below is the completion tree
-            token = None
-            for d, dname in zip(node.mcast_dirs, node.dsts):
-                arrived = _ppermute(stream, payload, d)
-                if chunked:
-                    st[dname], = chunk_scatter(arrived, [st[dname]],
-                                               node.chunk_offset,
-                                               node.chunk_elems)
-                else:
-                    st[dname] = arrived
-                tok = arrived.ravel()[:1]
-                token = tok if token is None else _tie(token, tok)
-        else:
-            arrived = _ppermute(stream, payload, node.direction)
-            if chunked:
-                dnames = node.dsts if packed else (node.dst,)
-                updated = chunk_scatter(arrived, [st[d] for d in dnames],
-                                        node.chunk_offset,
-                                        node.chunk_elems)
-                for dname, new in zip(dnames, updated):
-                    st[dname] = new
-            elif packed:
-                for dst, part in zip(
-                        node.dsts,
-                        unpack_flat(arrived, [st[d] for d in node.dsts])):
-                    st[dst] = part
-            else:
-                st[node.dst] = arrived
-            token = arrived.ravel()[:1]
-        ctx.tokens[node.op_id] = token
-        if with_chained and node.chained is not None:
-            st = _emit_completion_signal(stream, node, st, token)
-    elif node.kind == "complete":
-        pass        # epoch-close marker: deps were precomputed by passes
-    elif node.kind == "wait":
-        # wait kernel: all subsequent reads of the window's (this
-        # phase's) data buffers depend on the completion counter. The
-        # fence set comes from lowering (node.writes); prefix-matching is
-        # the fallback for hand-built programs.
-        dep = st[node.counter]
-        for d in node.deps:
-            dep = _tie(dep, ctx.tokens.get(d))
-        fence = node.writes or tuple(
-            k for k in st
-            if k.startswith(node.window + ".") and not is_counter_name(k))
-        for k in fence:
-            st[k] = _tie(st[k], dep)
-        ctx.tokens[node.op_id] = dep.ravel()[:1]
-    else:
-        raise ValueError(f"cannot emit node kind {node.kind!r}")
-    return st
 
 
 # ---------------------------------------------------------------------------
@@ -311,7 +100,49 @@ def run_compiled(stream, prog, state, donate=True):
 _BLOCKING = ("start", "complete", "wait")
 
 
+def _assert_dispatch_order(prog):
+    """Prove the serialized dispatch order satisfies every dependency
+    edge before dispatching anything.
+
+    run_host never re-emits dep edges — correctness rests entirely on
+    ``prog.nodes`` order respecting them. A schedule whose edge points
+    FORWARD (a node depending on an op dispatched later — e.g. a
+    multi-stream program handed to the host path without re-ordering)
+    used to be silently accepted and executed wrong. Here it raises,
+    with a witness cycle from :func:`repro.core.verify.find_cycle` over
+    the waiting-for graph (each node waits for its unemitted deps AND
+    its dispatch predecessor — the same construction
+    ``stream_interleaved_order`` uses for its stuck witness)."""
+    pos = {n.op_id: i for i, n in enumerate(prog.nodes)}
+    violated = [(n, d) for n in prog.nodes for d in n.deps
+                if d in pos and pos[d] > pos[n.op_id]]
+    if not violated:
+        return
+    from repro.core.verify import find_cycle
+
+    nodes = {n.op_id: n for n in prog.nodes}
+
+    def waiting_for(op_id):
+        succ = [d for d in nodes[op_id].deps if d in nodes]
+        i = pos[op_id]
+        if i > 0:
+            succ.append(prog.nodes[i - 1].op_id)
+        return succ
+
+    cyc = find_cycle(nodes, waiting_for)
+    witness = " -> ".join(f"{nodes[i].kind}#{i}" for i in (cyc or []))
+    n, d = violated[0]
+    raise ValueError(
+        f"run_host: dependency edge out of dispatch order — "
+        f"{n.kind}#{n.op_id} ({n.label or n.window}) depends on op {d} "
+        f"dispatched only later; the serialized host order would "
+        f"silently ignore the edge. Re-schedule for the host path "
+        f"(nstreams=1) or use the st/fused executors. "
+        f"Witness cycle: {witness or 'forward edge'}")
+
+
 def run_host(stream, prog, state):
+    _assert_dispatch_order(prog)
     for node in prog.nodes:
         if node.kind == "put" and node.chained is not None \
                 and node.chained.wire:
@@ -336,7 +167,8 @@ def _dispatch_host(stream, node, state, unit):
     if cache is None:
         cache = stream._host_cache = {}
     # deps/epochs excluded: host ordering is the serialized dispatch
-    # itself, so one executable per structural op serves all iterations
+    # itself (proven by _assert_dispatch_order), so one executable per
+    # structural op serves all iterations
     ck = (unit, node.structural_key(with_deps=False), keys)
     jfn = cache.get(ck)
     if jfn is None:

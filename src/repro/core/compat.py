@@ -24,6 +24,35 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
                              out_specs=out_specs, check_rep=check_vma)
 
 
+def fusion_backend() -> str:
+    """Emission backend for the device-resident progress engine
+    (:mod:`repro.core.engine`): ``"pallas"`` when the default backend is
+    a TPU and Pallas imports (the arena counter-protocol can run as one
+    persistent ``pallas_call`` mega-kernel per segment), ``"traced"``
+    everywhere else (CPU emulation, GPU, missing Pallas) — the fused
+    wave-major traced emission, bit-identical by construction."""
+    try:
+        platform = jax.default_backend()
+    except Exception:
+        return "traced"
+    if platform != "tpu":
+        return "traced"
+    try:
+        from jax.experimental import pallas  # noqa: F401
+    except ImportError:
+        return "traced"
+    return "pallas"
+
+
+def supports_fused() -> bool:
+    """Whether the installed JAX can run fused segments at all. Always
+    True today: the traced fallback needs nothing beyond what
+    ``run_compiled`` already uses — the autotuner gates the ``fused``
+    search-space knob on this so an installation that ever loses the
+    fallback prunes the knob instead of erroring mid-search."""
+    return True
+
+
 def make_mesh(shape, axes):
     """``jax.make_mesh`` with ``axis_types`` only where it exists."""
     shape, axes = tuple(shape), tuple(axes)

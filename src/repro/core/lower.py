@@ -43,13 +43,13 @@ import numpy as np
 from repro.core.triggered import TriggeredOp, TriggeredProgram
 
 
-def buffer_spec(stream, qualified: str):
-    """(nbytes, dtype_name) of a window buffer like ``"faces.send101"``
-    (pong keys resolve to their ping buffer's spec); (0, "") when no
-    window owns the key. The dtype is threaded onto put nodes so the
-    pack_puts schedule pass only merges byte-compatible payloads into
-    one staging buffer."""
-    for win in stream.windows.values():
+def window_buffer_spec(windows, qualified: str):
+    """(nbytes, dtype_name) of ``qualified`` resolved against a windows
+    dict (``{name: STWindow}``) — the stream-free variant of
+    :func:`buffer_spec` for consumers that only hold a scheduled
+    program (the segment planner's arena layout); (0, "") when no
+    window owns the key (counter names, staging keys)."""
+    for win in windows.values():
         prefix = win.name + "."
         if qualified.startswith(prefix):
             spec = win.spec_of(qualified[len(prefix):])
@@ -58,6 +58,37 @@ def buffer_spec(stream, qualified: str):
                 nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
                 return nbytes, np.dtype(dtype).name
     return 0, ""
+
+
+def buffer_spec(stream, qualified: str):
+    """(nbytes, dtype_name) of a window buffer like ``"faces.send101"``
+    (pong keys resolve to their ping buffer's spec); (0, "") when no
+    window owns the key. The dtype is threaded onto put nodes so the
+    pack_puts schedule pass only merges byte-compatible payloads into
+    one staging buffer."""
+    return window_buffer_spec(stream.windows, qualified)
+
+
+def arena_layout(windows, buffer_names, *, align: int = 64):
+    """Static per-segment device arena: assign every buffer/counter name
+    in ``buffer_names`` a fixed, ``align``-aligned byte offset, returning
+    ``(offsets, arena_nbytes)``.
+
+    Window buffers reserve their real payload size (rounded up to the
+    alignment); names no window owns — counter slots, pack/chunk staging
+    keys — reserve one aligned slot each (a counter is a single int32
+    cell; the alignment quantum keeps concurrent bumps on separate cache
+    lines). Offsets are assigned in sorted-name order, so the layout is
+    a pure function of the footprint: the engine can bake the offsets
+    into its fused emission unit and the host never recomputes them."""
+    offsets: Dict[str, int] = {}
+    off = 0
+    for name in sorted(buffer_names):
+        nbytes, _ = window_buffer_spec(windows, name)
+        slot = -(-max(int(nbytes), align) // align) * align
+        offsets[name] = off
+        off += slot
+    return offsets, off
 
 
 def buffer_nbytes(stream, qualified: str) -> int:

@@ -205,6 +205,7 @@ def pattern_programs(name: str, niter: int, *, grid=None,
                      ranks_per_node: Optional[int] = None,
                      node_aware: bool = False, coalesce: bool = False,
                      pack: bool = False, chunk_bytes: int = 0,
+                     fused: bool = False,
                      config=None, tuned_path: Optional[str] = None,
                      size: Optional[str] = None,
                      **build_kw):
@@ -219,7 +220,10 @@ def pattern_programs(name: str, niter: int, *, grid=None,
     node aggregation); ``pack`` materializes off-node aggregation groups
     as packed multi-buffer put descriptors (schedule.pack_puts);
     ``chunk_bytes`` splits larger off-node puts into pipelined chunk
-    chains (schedule.chunk_puts).
+    chains (schedule.chunk_puts); ``fused`` marks the program for the
+    device-resident progress engine and runs the segment planner
+    (schedule.plan_segments) — the simulator then charges host dispatch
+    per SEGMENT and the verifier learns the wave-boundary HB edges.
 
     ``config`` overrides the individual knobs above with a tuned
     :class:`~repro.core.autotune.ScheduleConfig` (or its dict form) —
@@ -243,6 +247,7 @@ def pattern_programs(name: str, niter: int, *, grid=None,
         coalesce, pack = cfg.coalesce, cfg.pack
         chunk_bytes = cfg.chunk_bytes
         double_buffer = cfg.double_buffer
+        fused = getattr(cfg, "fused", False)
         if cfg.multicast is not None:
             build_kw = dict(build_kw, multicast=cfg.multicast)
     stream = STStream(None, p.grid_axes, grid_shape=grid)
@@ -255,7 +260,8 @@ def pattern_programs(name: str, niter: int, *, grid=None,
                                       nstreams=nstreams,
                                       node_aware=node_aware,
                                       coalesce=coalesce, pack=pack,
-                                      chunk_bytes=chunk_bytes)
+                                      chunk_bytes=chunk_bytes,
+                                      fused=fused)
     if config is not None:
         for prog in progs:
             prog.meta["config"] = cfg.to_dict()
@@ -270,6 +276,7 @@ def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
                      ranks_per_node: Optional[int] = None,
                      node_aware: bool = False, coalesce: bool = False,
                      pack: bool = False, chunk_bytes: int = 0,
+                     fused: bool = False,
                      config=None, tuned_path: Optional[str] = None,
                      size: Optional[str] = None,
                      **build_kw) -> float:
@@ -310,6 +317,7 @@ def simulate_pattern(name: str, niter: int, *, policy: str = "adaptive",
                              ranks_per_node=ranks_per_node,
                              node_aware=node_aware, coalesce=coalesce,
                              pack=pack, chunk_bytes=chunk_bytes,
+                             fused=fused,
                              config=config, tuned_path=tuned_path,
                              size=size, **build_kw)
     return simulate_pipeline(progs, cm, host_orchestrated)

@@ -64,12 +64,22 @@ Passes
     a node in the same program; dangling edges (e.g. referencing a put
     in a previous host_sync segment) raise here instead of being
     silently treated as complete by the simulator.
+  * :func:`plan_segments` — segment planning for the device-resident
+    progress engine (``fused=True``): partition the scheduled DAG into
+    per-stream SEGMENTS — maximal runs of consecutive same-stream
+    descriptors with no cross-stream dependency edge entering mid-run —
+    and assign every buffer/counter each segment touches a static
+    offset in a per-segment device arena. The engine
+    (:mod:`repro.core.engine`) lowers each segment into ONE fused
+    emission unit; the host's only job is launch.
 
 :func:`schedule` is the driver applying the passes in order.
 """
 from __future__ import annotations
 
 from collections import defaultdict
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, Tuple
 
 import numpy as np
 
@@ -666,6 +676,132 @@ def validate_deps(prog: TriggeredProgram) -> TriggeredProgram:
     return prog
 
 
+# ---------------------------------------------------------------------------
+# segment planning (device-resident progress engine)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Segment:
+    """One fused emission unit of the device-resident progress engine: a
+    maximal run of CONSECUTIVE same-stream descriptors with no
+    cross-stream dependency edge entering mid-run. ``wave`` is the
+    segment's global launch level (every cross-stream edge points from a
+    strictly earlier wave); ``arena`` assigns each window buffer and
+    counter the segment touches a static, 64-byte-aligned byte offset in
+    the segment's device arena (``arena_nbytes`` total), so the engine's
+    counters/semaphores live at fixed addresses for the segment's whole
+    lifetime — no per-op host bookkeeping."""
+    stream: int
+    wave: int
+    op_ids: Tuple[int, ...]
+    arena: Dict[str, int]
+    arena_nbytes: int
+
+
+@dataclass(frozen=True)
+class SegmentPlan:
+    """Full segment partition of one scheduled program.
+
+    ``wave_of`` maps every op_id to its segment's wave; ``heads`` is the
+    set of op_ids that OPEN a segment — the simulator charges host
+    dispatch once per head (per-segment, not per-op) when the program is
+    fused, and the verifier anchors its segment-boundary happens-before
+    edges on them."""
+    segments: Tuple[Segment, ...]
+    wave_of: Dict[int, int]
+    heads: FrozenSet[int]
+
+    @property
+    def waves(self) -> int:
+        return 1 + max((s.wave for s in self.segments), default=-1)
+
+
+def plan_segments(prog: TriggeredProgram) -> SegmentPlan:
+    """Partition a scheduled program into per-stream segments.
+
+    Wave/level fixpoint: every node starts at wave 0; a forward sweep in
+    program order enforces (a) per-stream monotonicity (a node's wave is
+    at least its stream's previous node's wave — segments are CONSECUTIVE
+    runs) and (b) cross-stream edges advance the wave (a node depending
+    on another stream's node lands at least one wave later, so the edge
+    meets a segment BOUNDARY, never mid-run). Chunk-chain coherence then
+    lifts every chunk of a chain to the chain's maximum wave — a chain
+    never splits across segments (and by per-stream monotonicity the
+    same-stream nodes interleaved between its chunks ride along into the
+    same wave). Packed groups are ONE descriptor after pack_puts, so
+    they cannot split by construction. The sweep repeats until no wave
+    moves; waves only ever increase and are bounded by the node count,
+    so the fixpoint terminates.
+
+    Each segment's arena (static buffer/counter offsets) is laid out
+    from its :func:`_accesses` footprint via
+    :func:`repro.core.lower.arena_layout`. The plan is recorded in
+    ``prog.meta["segment_plan"]`` / ``meta["segments"]``."""
+    from repro.core.lower import arena_layout
+
+    nodes = prog.nodes
+    by_id = {n.op_id: n for n in nodes}
+    level: Dict[int, int] = {n.op_id: 0 for n in nodes}
+    chains: Dict[int, list] = defaultdict(list)
+    for n in nodes:
+        if n.kind == "put" and n.chunk_count > 1 and n.chunk_head >= 0:
+            chains[n.chunk_head].append(n.op_id)
+    changed = True
+    while changed:
+        changed = False
+        last: Dict[int, int] = {}
+        for n in nodes:
+            lv = max(level[n.op_id], last.get(n.stream, 0))
+            for d in n.deps:
+                dn = by_id.get(d)
+                if dn is not None and dn.stream != n.stream:
+                    lv = max(lv, level[d] + 1)
+            if lv != level[n.op_id]:
+                level[n.op_id] = lv
+                changed = True
+            last[n.stream] = lv
+        for members in chains.values():
+            top = max(level[m] for m in members)
+            for m in members:
+                if level[m] != top:
+                    level[m] = top
+                    changed = True
+
+    segments = []
+    open_ops: Dict[int, list] = {}
+    open_wave: Dict[int, int] = {}
+
+    def close(stream: int) -> None:
+        ops = open_ops.pop(stream, [])
+        if not ops:
+            return
+        names: set = set()
+        for oid in ops:
+            reads, writes = _accesses(by_id[oid])
+            names |= reads | writes
+        names.discard(None)
+        arena, nbytes = arena_layout(prog.windows, names)
+        segments.append(Segment(stream=stream, wave=open_wave[stream],
+                                op_ids=tuple(ops), arena=arena,
+                                arena_nbytes=nbytes))
+
+    for n in nodes:
+        w = level[n.op_id]
+        if n.stream in open_ops and open_wave[n.stream] != w:
+            close(n.stream)
+        open_ops.setdefault(n.stream, []).append(n.op_id)
+        open_wave[n.stream] = w
+    for s in list(open_ops):
+        close(s)
+    segments.sort(key=lambda s: (s.wave, s.stream))
+
+    plan = SegmentPlan(segments=tuple(segments), wave_of=dict(level),
+                       heads=frozenset(s.op_ids[0] for s in segments))
+    prog.meta["segment_plan"] = plan
+    prog.meta["segments"] = len(plan.segments)
+    return plan
+
+
 def schedule(prog: TriggeredProgram, *, throttle: str = "adaptive",
              resources: int = 64, merged: bool = True,
              ordered: bool = False, nstreams: int = 1,
@@ -673,6 +809,7 @@ def schedule(prog: TriggeredProgram, *, throttle: str = "adaptive",
              coalesce: bool = False,
              pack: bool = False,
              chunk_bytes: int = 0,
+             fused: bool = False,
              verify: bool = False) -> TriggeredProgram:
     """Apply all schedule passes; returns the same (mutated) program.
 
@@ -689,6 +826,12 @@ def schedule(prog: TriggeredProgram, *, throttle: str = "adaptive",
     cross-stream conflict edges are derived from the final emission
     order).
 
+    ``fused=True`` runs :func:`plan_segments` over the finished schedule
+    (after every edge is final) and marks the program for the
+    device-resident progress engine: :func:`repro.core.engine.run_fused`
+    launches one fused emission unit per segment instead of walking the
+    DAG op by op, and the simulator charges host dispatch per segment.
+
     ``verify=True`` additionally runs the static verifier
     (:mod:`repro.core.verify`) over the finished schedule and raises
     :class:`repro.core.verify.ScheduleVerificationError` on any
@@ -702,6 +845,9 @@ def schedule(prog: TriggeredProgram, *, throttle: str = "adaptive",
     prog = node_aware_pass(prog, node_aware, coalesce)
     prog = assign_streams(prog, nstreams)
     prog = validate_deps(prog)
+    prog.meta["fused"] = bool(fused)
+    if fused:
+        plan_segments(prog)
     if verify:
         from repro.core.verify import verify as _verify
         _verify(prog).raise_if_errors()

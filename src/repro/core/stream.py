@@ -7,7 +7,8 @@ triggered-op IR (repro.core.triggered):
 
     enqueue API --(1) lower.py--> TriggeredProgram DAG
                 --(2) schedule.py passes--> scheduled DAG (+dep edges)
-                --(3) backends.py / throttle.py--> one of three emitters
+                --(3) backends.py / engine.py / throttle.py--> one of
+                      four emitters
 
 Stage-3 emitters all consume the SAME scheduled DAG:
 
@@ -19,6 +20,12 @@ Stage-3 emitters all consume the SAME scheduled DAG:
   * mode="host" (Fig. 9a): each descriptor runs as its own jitted call
     with host blocking at every epoch boundary — the CPU-orchestrated
     standard active-RMA baseline.
+
+  * mode="fused": the device-resident progress engine
+    (core/engine.py) — the schedule is planned into per-stream
+    segments and each segment launches as ONE fused emission unit;
+    host involvement scales with the segment count, not the
+    descriptor count.
 
   * the cost simulator (core/throttle.py) walks the identical schedule,
     so benchmarks' "derived" column cannot drift from what executes.
@@ -182,7 +189,7 @@ class STStream:
         # a closure created after clear() can never alias a stale
         # _sched_cache/_compiled_cache entry even if id() is reused
         self._fn_tokens.clear()
-        for cache in ("_compiled_cache", "_host_cache"):
+        for cache in ("_compiled_cache", "_host_cache", "_fused_cache"):
             if hasattr(self, cache):
                 getattr(self, cache).clear()
 
@@ -233,6 +240,7 @@ class STStream:
                            coalesce: bool = False,
                            pack: bool = False,
                            chunk_bytes: int = 0,
+                           fused: bool = False,
                            config=None) -> List[TriggeredProgram]:
         """Lower the op queue and run the schedule passes; one scheduled
         descriptor DAG per host_sync-delimited segment. Cached per
@@ -262,7 +270,7 @@ class STStream:
             return self.scheduled_programs(**config.sched_kwargs())
         key = (tuple(op.cache_key() for op in self.program),
                throttle, resources, merged, ordered, nstreams,
-               node_aware, coalesce, pack, chunk_bytes)
+               node_aware, coalesce, pack, chunk_bytes, fused)
         progs = self._sched_cache.get(key)
         if progs is None:
             progs = [
@@ -270,7 +278,7 @@ class STStream:
                          resources=resources, merged=merged,
                          ordered=ordered, nstreams=nstreams,
                          node_aware=node_aware, coalesce=coalesce,
-                         pack=pack, chunk_bytes=chunk_bytes)
+                         pack=pack, chunk_bytes=chunk_bytes, fused=fused)
                 for seg in split_segments(self.program)]
             self._sched_cache[key] = progs
         return progs
@@ -281,11 +289,15 @@ class STStream:
                     donate: bool = True, ordered: bool = False,
                     nstreams: int = 1, node_aware: bool = False,
                     coalesce: bool = False, pack: bool = False,
-                    chunk_bytes: int = 0, config=None):
+                    chunk_bytes: int = 0, fused: bool = False,
+                    config=None):
         """Execute the enqueued program; returns the new state.
 
         mode="st": one compiled program, single host sync (this call).
         mode="host": per-descriptor dispatch, blocking at epoch boundaries.
+        mode="fused": the device-resident progress engine — one fused
+        emission unit per planned segment (``fused=True`` scheduling is
+        implied; the segment planner runs over the finished schedule).
         ``pack`` materializes off-node aggregation groups as packed
         multi-buffer put descriptors (schedule.pack_puts);
         ``chunk_bytes`` splits larger off-node puts into pipelined chunk
@@ -296,12 +308,16 @@ class STStream:
         if self.mesh is None:
             raise ValueError("cannot execute a device-free stream "
                              "(constructed with mesh=None)")
+        fused = fused or mode == "fused"
         for prog in self.scheduled_programs(
                 throttle=throttle, resources=resources, merged=merged,
                 ordered=ordered, nstreams=nstreams, node_aware=node_aware,
                 coalesce=coalesce, pack=pack, chunk_bytes=chunk_bytes,
-                config=config):
-            if mode == "st":
+                fused=fused, config=config):
+            if mode == "fused":
+                from repro.core import engine
+                state = engine.run_fused(self, prog, state, donate=donate)
+            elif mode == "st":
                 state = backends.run_compiled(self, prog, state,
                                               donate=donate)
             else:

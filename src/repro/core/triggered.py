@@ -10,13 +10,16 @@ This module is the first-class program representation of the compiler
 pipeline:
 
     STStream op queue --lower--> TriggeredProgram --schedule--> same
-    TriggeredProgram with dependency edges --emit--> one of three
-    backends (compiled ST / host-orchestrated / cost simulator).
+    TriggeredProgram with dependency edges --emit--> one of four
+    consumers (compiled ST / host-orchestrated / fused progress
+    engine / cost simulator).
 
   * stage 1: :mod:`repro.core.lower` builds the descriptor DAG,
   * stage 2: :mod:`repro.core.schedule` passes add throttling /
-    ordering edges and fuse signal kernels,
-  * stage 3: :mod:`repro.core.backends` (executors) and
+    ordering edges, fuse signal kernels, and (``fused=True``) plan
+    per-stream segments,
+  * stage 3: :mod:`repro.core.backends` (executors),
+    :mod:`repro.core.engine` (device-resident progress engine), and
     :mod:`repro.core.throttle` (simulator) consume the scheduled DAG.
 
 TPU adaptation: counters are named slots in a device-resident counter
@@ -276,6 +279,10 @@ class TriggeredProgram:
             "double_buffer": self.meta.get("double_buffer", False),
             "node_aware": self.meta.get("node_aware", False),
             "pack": self.meta.get("pack", False),
+            # device-resident progress engine (schedule.plan_segments):
+            # fused schedules launch per-SEGMENT, not per-op
+            "fused": bool(self.meta.get("fused", False)),
+            "segments": self.meta.get("segments", 0),
         }
 
 

@@ -23,7 +23,11 @@ property families over EVERY execution the schedule admits:
        the edge leaves the put's completion event),
      * counter joins: a put's chained completion signal releases every
        wait polling the same (window, epoch, counter), so
-       completion(put) -> wait.
+       completion(put) -> wait,
+     * segment boundaries (fused schedules only): the device-resident
+       progress engine launches wave w+1's fused emission units only
+       after every wave-w segment retired, so each wave-w op's terminal
+       event happens-before every wave-(w+1) segment head.
 
    A put reads its payload from issue until completion (the NIC streams
    the bytes), so source reads are attributed to BOTH events; dst
@@ -287,6 +291,30 @@ class _EventGraph:
                 continue
             for w in waits.get((p.window, p.epoch, p.chained.counter), ()):
                 succ[self.done[p.op_id]].append(self.issue[w.op_id])
+        # segment-boundary edges (fused progress engine only): the
+        # engine sequences wave w+1's fused emission units behind every
+        # wave-w segment's retirement, so the TERMINAL event of each
+        # wave-w op (completion for puts, the single event otherwise)
+        # happens-before the head event of every wave-(w+1) segment —
+        # ordering the planner's wave structure guarantees on top of
+        # the explicit dependency edges. All edges point forward in
+        # wave order, so they can never introduce a cycle.
+        if prog.meta.get("fused"):
+            plan = prog.meta.get("segment_plan")
+            if plan is None:
+                from repro.core.schedule import plan_segments
+                plan = plan_segments(prog)
+            heads_of_wave: Dict[int, List[int]] = defaultdict(list)
+            for seg in plan.segments:
+                if seg.op_ids and seg.op_ids[0] in self.issue:
+                    heads_of_wave[seg.wave].append(
+                        self.issue[seg.op_ids[0]])
+            for n in prog.nodes:
+                w = plan.wave_of.get(n.op_id)
+                if w is None:
+                    continue
+                for e in heads_of_wave.get(w + 1, ()):
+                    succ[self.done[n.op_id]].append(e)
         self.succ = succ
 
     def toposort(self) -> Optional[List[int]]:
@@ -822,6 +850,7 @@ def main(argv=None) -> int:
     ap.add_argument("--node_aware", type=int, default=0)
     ap.add_argument("--pack", type=int, default=0)
     ap.add_argument("--chunk_bytes", type=int, default=0)
+    ap.add_argument("--fused", type=int, default=0)
     args = ap.parse_args(argv)
 
     failures = 0
@@ -837,7 +866,7 @@ def main(argv=None) -> int:
             nstreams=args.nstreams,
             double_buffer=bool(args.double_buffer),
             node_aware=bool(args.node_aware), pack=bool(args.pack),
-            chunk_bytes=args.chunk_bytes)
+            chunk_bytes=args.chunk_bytes, fused=bool(args.fused))
         report = verify_programs(
             _cli_programs(args.pattern, cfg, args.niter, grid, rpn))
         print(f"{args.pattern} [{cfg.label()}]: {report.summary()}")

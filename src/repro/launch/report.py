@@ -82,11 +82,12 @@ def st_stats_table(recs):
     --json-dir records, any pattern). Records written before a column
     existed (pre-overlap nstreams/double_buffer, pre-topology R/link
     fields) render with defaults instead of raising."""
-    rows = ["| name | pattern | mode | throttle | R | streams | dbuf | "
-            "node-aware | packed | chunks | mcast | us/iter | derived | "
-            "puts/epoch | inter | hwm | crit depth | dep edges |",
+    rows = ["| name | pattern | exec | throttle | R | streams | dbuf | "
+            "node-aware | packed | chunks | mcast | segs | us/iter | "
+            "derived | puts/epoch | inter | hwm | crit depth | "
+            "dep edges |",
             "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"
-            "---|---|---|---|"]
+            "---|---|---|---|---|"]
     for r in recs:
         if "stats" not in r:
             continue
@@ -103,11 +104,15 @@ def st_stats_table(recs):
         # an unbounded policy (none/application) holds no slots: its
         # record carries resources=None and renders as "—"
         res = r.get("resources", s.get("resources"))
+        # exec = which stage-3 consumer ran (st/host/fused); segs = the
+        # planner's segment count (0 for unfused records and records
+        # predating the progress engine)
+        segs = s.get("segments", 0) if s.get("fused") else 0
         rows.append(
             f"| {r.get('name', '?')} | {pattern} | {r.get('mode', '-')} | "
             f"{r.get('throttle', '-')} | {_num(res, 'd')} | {nstreams} | "
             f"{'y' if dbuf else 'n'} | {'y' if node_aware else 'n'} | "
-            f"{packed} | {chunks} | {mcast} | "
+            f"{packed} | {chunks} | {mcast} | {segs} | "
             f"{_num(r.get('us_per_iter'), '.1f')} | "
             f"{_num(r.get('derived_us_per_iter'), '.2f')} | "
             f"{_num(s.get('puts_per_epoch'), '.0f')} | "
