@@ -1,7 +1,7 @@
 """ST benchmark worker (runs in its own process so it can claim fake
 devices). Originally Faces-only, now pattern-agnostic: ``--pattern``
 selects any registered ST program builder (faces / ring / a2a /
-broadcast) and the whole worker body — build, schedule, execute,
+broadcast / serve) and the whole worker body — build, schedule, execute,
 simulate, stats — is shared. Prints one CSV line: name,us_per_call,derived — plus a "#stats"
 comment line with the scheduled program's descriptor counts.
 
@@ -29,10 +29,12 @@ import sys
 # --verify_multicast)
 VERIFY_OUTPUTS = {"faces": ["acc", "res", "src", "it"],
                   "ring": ["out"], "a2a": ["out", "aux"],
-                  "broadcast": ["ctile", "it"]}
+                  "broadcast": ["ctile", "it"],
+                  "serve": ["mirror", "outtok", "hmir", "step"]}
 VERIFY_INPUTS = {"faces": ["src"], "ring": ["q", "k", "v"],
                  "a2a": ["x", "router", "wg", "wu", "wd"],
-                 "broadcast": ["abase", "b"]}
+                 "broadcast": ["abase", "b"],
+                 "serve": ["kv", "tok", "hid"]}
 
 
 def seeded_state(stream, win, pattern, seed):
@@ -47,7 +49,12 @@ def seeded_state(stream, win, pattern, seed):
     rng = np.random.RandomState(seed)
     for b in VERIFY_INPUTS[pattern]:
         k = win.qual(b)
-        val = rng.rand(*st[k].shape).astype(np.asarray(st[k]).dtype) * 0.3
+        dtype = np.asarray(st[k]).dtype
+        if np.issubdtype(dtype, np.integer):
+            # token-id style buffers: rand*0.3 truncates to all-zero
+            val = rng.randint(1, 97, size=st[k].shape).astype(dtype)
+        else:
+            val = rng.rand(*st[k].shape).astype(dtype) * 0.3
         st[k] = jax.device_put(val, st[k].sharding)
     return st
 
@@ -83,6 +90,8 @@ def build_kwargs(args, ndev):
                     experts=2 * ndev, top_k=2)
     if args.pattern == "broadcast":
         return dict(tile=args.block, multicast=bool(args.multicast))
+    if args.pattern == "serve":
+        return dict(slots=args.block, kv_dim=16, d_model=16)
     raise ValueError(f"no size mapping for pattern {args.pattern!r}")
 
 
@@ -93,7 +102,7 @@ def main():
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--pattern", default="faces",
-                    choices=["faces", "ring", "a2a", "broadcast"])
+                    choices=["faces", "ring", "a2a", "broadcast", "serve"])
     ap.add_argument("--grid", default="2,2,2",
                     help="process grid, e.g. 2,2,2 (faces) or 4 (ring/a2a)")
     ap.add_argument("--block", type=int, default=8,

@@ -41,6 +41,14 @@ Sections:
          results/tuned.json, plus executor workers running
          ``--config auto`` through BOTH backends with in-process
          bit-identity verification against the default schedule
+  serve  ST-driven serving fast path (repro.serving): derived decode-
+         epoch cost per active-slot bucket — scheduled ST program vs
+         the host-orchestrated baseline over the same epoch — executor
+         workers over the serve pattern (host / adaptive ST / fused
+         progress engine with bit-identity), and an in-process
+         2-replica Poisson traffic smoke reporting p50/p99 latency,
+         TTFT, and tokens/sec (wall metrics in us_per_call,
+         derived=0.00 so container timing never gates the trajectory)
   roofline  per (arch x shape x mesh) terms from results/dryrun
   throughput  tiny-config train tokens/s
 
@@ -48,7 +56,7 @@ Worker failures are COUNTED and the harness exits nonzero (CI gates on
 this). ``--json PATH`` writes every parsed row + failures + invariant
 checks as one JSON record AND a repo-root ``<BENCH_ID>.json`` perf-
 trajectory record (row-name -> derived latency, rows, invariants; the
-id comes from ``--bench-id``/``$BENCH_ID``, default BENCH_9) that CI
+id comes from ``--bench-id``/``$BENCH_ID``, default BENCH_10) that CI
 uploads — and diffs against the previous PR's record via
 ``scripts/check_trajectory.py`` — so regressions in derived numbers
 show up as a one-line diff instead of flying blind;
@@ -65,10 +73,14 @@ structure predicts), the chunk-pipeline rule (chunked derived latency
 STRICTLY below monolithic at the large-message off-node points), the
 multicast rule (one multicast descriptor strictly below the
 unicast fanout), the autotune rule (the searched config's derived
-latency <= the default config's), and the progress-engine rules (fused
+latency <= the default config's), the progress-engine rules (fused
 derived latency <= compiled, per-segment host-dispatch counts strictly
 below per-op counts for every multi-epoch pattern) for every ST
-pattern. ``BENCH_SMOKE=1``
+pattern, and the serving SLO rules (ST decode-epoch derived cost <=
+the host-orchestrated baseline per slot bucket, ST-routed tokens
+bit-identical to the baseline engine, traffic queue drained with
+bounded finite p99, serve-program meta present on every ST replica).
+``BENCH_SMOKE=1``
 keeps only the small-grid configs (CI), ``BENCH_NITER`` overrides
 iterations per worker.
 """
@@ -595,6 +607,7 @@ _AUTOTUNE_SPECS = [
     ("ring", (4,), 2, dict(seq_per_rank=32), 32),
     ("a2a", (4,), 2, dict(seq=16), 16),
     ("broadcast", (2, 4), 2, dict(tile=16), 16),
+    ("serve", (4,), 2, dict(slots=4), 4),
 ]
 TUNED_PATH = os.path.join(ROOT, "results", "tuned.json")
 CALIBRATION_PATH = os.path.join(ROOT, "results", "calibration.json")
@@ -727,6 +740,150 @@ def _autotune_calibrated_lines():
               "measured constants)")
 
 
+_SERVE_GRID = (4,)
+_SERVE_RPN = 2
+_SERVE_BUCKETS = [2, 4]
+_SERVE_CACHE = None
+_SERVE_TRAFFIC_CACHE = None
+
+
+def _serve_points():
+    """Device-free st-vs-host derived costs of ONE serving decode epoch
+    (KV mirror + MoE dispatch, core/serve_decode.py) per active-slot
+    bucket: the scheduled adaptive ST program against the host-
+    orchestrated baseline over the SAME epoch — the decode fast path's
+    derived-latency claim, priced like fig12's."""
+    global _SERVE_CACHE
+    if _SERVE_CACHE is not None:
+        return _SERVE_CACHE
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.core.patterns import pattern_programs
+    from repro.core.throttle import CostModel, simulate_pipeline
+
+    niter = 4
+    out = []
+    for b in _SERVE_BUCKETS:
+        common = dict(grid=_SERVE_GRID, ranks_per_node=_SERVE_RPN,
+                      slots=b)
+        host = pattern_programs("serve", niter, throttle="none",
+                                merged=False, **common)
+        st = pattern_programs("serve", niter, throttle="adaptive",
+                              resources=8, **common)
+        out.append(dict(
+            bucket=b,
+            host=simulate_pipeline(host, CostModel(),
+                                   host_orchestrated=True) / niter,
+            st=simulate_pipeline(st, CostModel()) / niter))
+    _SERVE_CACHE = out
+    return out
+
+
+def _serve_traffic():
+    """In-process serving smoke on the tiny reduced arch: the same
+    fixed-seed Poisson stream through a baseline fleet and an ST-routed
+    fleet (2 replicas each, repro.launch.traffic), plus a fixed-request
+    bit-identity comparison of the two decode paths on shared seeded
+    params. Wall-clock only — the rows it feeds print derived=0.00 so
+    the trajectory gate never prices container timing."""
+    global _SERVE_TRAFFIC_CACHE
+    if _SERVE_TRAFFIC_CACHE is not None:
+        return _SERVE_TRAFFIC_CACHE
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    import dataclasses
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.autotune import ScheduleConfig
+    from repro.launch.traffic import TrafficConfig, run_traffic
+    from repro.models import init_params, model_specs
+    from repro.serving import Request, ServingEngine
+    from repro.sharding.rules import make_rules
+
+    cfg = dataclasses.replace(
+        get_config("granite-3-2b").reduced(), num_layers=2, d_model=64,
+        num_heads=2, num_kv_heads=1, d_ff=128, vocab_size=256,
+        head_dim=32, grad_accum=1, remat="none")
+    rules = make_rules(cfg, None, None)
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+
+    def engines(st_mode, n):
+        kw = {} if st_mode is None else dict(
+            st_mode=st_mode, st_config=ScheduleConfig())
+        return [ServingEngine(cfg, params, rules, batch_slots=2,
+                              max_len=32, **kw) for _ in range(n)]
+
+    tcfg = TrafficConfig(requests=8, rate=500.0, replicas=2,
+                         batch_slots=2, max_len=32, prompt_len=(1, 4),
+                         max_new=(1, 3), seed=7)
+    out = {"base": run_traffic(tcfg, engines=engines(None, 2)),
+           "st": run_traffic(dataclasses.replace(tcfg, st_mode="st"),
+                             engines=engines("st", 2))}
+
+    def tokens(st_mode):
+        eng = engines(st_mode, 1)[0]
+        for i in range(5):                  # > slots: slot churn
+            eng.submit(Request(prompt=np.arange(1, 3 + i,
+                                                dtype=np.int32),
+                               max_new_tokens=3))
+        eng.run_until_drained()
+        return [r.out_tokens for r in eng.completed]
+
+    out["tokens_base"] = tokens(None)
+    out["tokens_st"] = tokens("st")
+    _SERVE_TRAFFIC_CACHE = out
+    return out
+
+
+def serve():
+    """ST-driven serving fast path: derived decode-epoch cost per
+    active-slot bucket (scheduled ST program vs the host-orchestrated
+    baseline), executor workers over the serve pattern (host baseline,
+    adaptive ST, fused progress engine with in-process bit-identity),
+    and the in-process 2-replica Poisson traffic smoke — p50/p99
+    latency and TTFT rows carry wall time in us_per_call with
+    derived=0.00."""
+    print("# serve: decode-time collectives on scheduled ST programs "
+          f"(grid {_SERVE_GRID}, rpn={_SERVE_RPN}) + continuous-"
+          "batching traffic smoke")
+    for p in _serve_points():
+        for variant, derived in (("host", p["host"]), ("st", p["st"])):
+            name = f"serve_b{p['bucket']}_rpn{_SERVE_RPN}_{variant}"
+            print(f"{name},0.0,{derived:.2f}")
+            RESULTS.append(dict(section="serve", name=name,
+                                us_per_call=0.0, derived=derived,
+                                nstreams=1, double_buffer=False,
+                                pattern="serve", bucket=p["bucket"],
+                                ranks_per_node=_SERVE_RPN,
+                                node_aware=False, coalesce=False,
+                                pack=False, chunk_bytes=0))
+    _worker("serve", pattern="serve", grid="4", block=4, mode="host",
+            throttle="none", merged=1, name="serve_host_4r")
+    _worker("serve", pattern="serve", grid="4", block=4, mode="st",
+            throttle="adaptive", resources=8, merged=1,
+            name="serve_st_adaptive_4r")
+    _worker("serve", pattern="serve", grid="4", block=4, exec="fused",
+            nstreams=2, throttle="adaptive", merged=1, resources=8,
+            verify_fused=1, name="serve_fused_4r")
+    t = _serve_traffic()
+    for mode in ("base", "st"):
+        s = t[mode]
+        for metric, val in (("lat_p50", s["latency_p50_ms"]),
+                            ("lat_p99", s["latency_p99_ms"]),
+                            ("ttft_p99", s["ttft_p99_ms"])):
+            name = f"serve_traffic_{mode}_{metric}"
+            print(f"{name},{val * 1e3:.1f},0.00")
+            RESULTS.append(dict(section="serve", name=name,
+                                us_per_call=val * 1e3, derived=0.0,
+                                nstreams=1, double_buffer=False,
+                                pattern="serve", st_mode=s["st_mode"],
+                                replicas=s["replicas"],
+                                tokens_per_s=s["tokens_per_s"]))
+        print(f"# serve traffic {mode}: {s['completed']}/"
+              f"{s['requests']} requests on {s['replicas']} replicas, "
+              f"{s['tokens_per_s']:.1f} tok/s, "
+              f"ttft p50={s['ttft_p50_ms']:.0f}ms")
+
+
 def roofline():
     print("# roofline: per-cell terms from results/dryrun "
           "(us_per_call = bound step time; derived = roofline fraction)")
@@ -818,6 +975,63 @@ def check_invariants():
     checks += check_chunk_invariants()
     checks += check_autotune_invariants()
     checks += check_fused_invariants()
+    checks += check_serve_invariants()
+    return checks
+
+
+def check_serve_invariants():
+    """Serving SLO gates: the scheduled ST decode epoch's derived cost
+    never exceeds the host-orchestrated baseline at any slot bucket;
+    the ST-routed engine serves BIT-IDENTICAL tokens to the baseline on
+    shared seeded params (the transported ``outtok`` buffer is what the
+    engine reads, so a delivery defect changes this); the traffic smoke
+    drains its queue with every request completed and a finite bounded
+    p99; and the serve-program meta is present on every ST replica —
+    proof the decode collectives actually ran on the ST path."""
+    import math
+
+    eps = 1e-9
+    checks = []
+    print("# invariants: serve st derived <= host baseline per bucket; "
+          "st tokens bit-identical; traffic drained, p99 bounded, "
+          "ST meta present")
+    for p in _serve_points():
+        ok = p["st"] <= p["host"] + eps
+        checks.append(dict(rule="serve_st_latency", pattern="serve",
+                           ok=ok, bucket=p["bucket"], st=p["st"],
+                           host=p["host"]))
+        print(f"# invariant serve b{p['bucket']}: st={p['st']:.2f} <= "
+              f"host={p['host']:.2f} -> {'OK' if ok else 'VIOLATED'}")
+    t = _serve_traffic()
+    ok = bool(t["tokens_base"]) and t["tokens_st"] == t["tokens_base"]
+    checks.append(dict(rule="serve_bit_identity", pattern="serve",
+                       ok=ok, requests=len(t["tokens_base"])))
+    print(f"# invariant serve bit-identity: st tokens == baseline over "
+          f"{len(t['tokens_base'])} requests -> "
+          f"{'OK' if ok else 'VIOLATED'}")
+    for mode in ("base", "st"):
+        s = t[mode]
+        drained = (bool(s["queue_drained"])
+                   and s["completed"] == s["requests"])
+        p99 = s["latency_p99_ms"]
+        bounded = math.isfinite(p99) and 0 < p99 < 120_000.0
+        ok = drained and bounded
+        checks.append(dict(rule="serve_slo", pattern="serve", ok=ok,
+                           mode=mode, drained=drained,
+                           latency_p99_ms=p99,
+                           ttft_p99_ms=s["ttft_p99_ms"],
+                           tokens_per_s=s["tokens_per_s"]))
+        print(f"# invariant serve slo [{mode}]: drained={drained} "
+              f"p99={p99:.0f}ms (<120000) -> "
+              f"{'OK' if ok else 'VIOLATED'}")
+    metas = [r.get("st") for r in t["st"]["per_replica"]]
+    ok = all(m and m["pattern"] == "serve" and m["buckets"]
+             and all(v["puts"] >= 1 for v in m["buckets"].values())
+             for m in metas)
+    checks.append(dict(rule="serve_st_meta", pattern="serve",
+                       ok=bool(ok), replicas=len(metas)))
+    print(f"# invariant serve st-meta: scheduled-program stats on "
+          f"{len(metas)} replica(s) -> {'OK' if ok else 'VIOLATED'}")
     return checks
 
 
@@ -1047,8 +1261,8 @@ SECTIONS = {
     "fig12": fig12, "fig13": fig13, "fig14": fig14, "fig15": fig15,
     "fig16_17": fig16_17, "ring": ring, "a2a": a2a, "overlap": overlap,
     "sweep": sweep, "pack": pack, "chunk": chunk, "broadcast": broadcast,
-    "fused": fused, "autotune": autotune, "roofline": roofline,
-    "throughput": throughput,
+    "fused": fused, "autotune": autotune, "serve": serve,
+    "roofline": roofline, "throughput": throughput,
 }
 
 
@@ -1064,7 +1278,7 @@ def main() -> None:
                          "overlapped <= single-stream on derived costs "
                          "for every ST pattern")
     ap.add_argument("--bench-id",
-                    default=os.environ.get("BENCH_ID", "BENCH_9"),
+                    default=os.environ.get("BENCH_ID", "BENCH_10"),
                     help="basename of the repo-root perf-trajectory "
                          "record --json also writes (env: BENCH_ID)")
     args = ap.parse_args()

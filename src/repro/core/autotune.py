@@ -293,6 +293,20 @@ def autotune(pattern: str, niter: int = 2, *, grid=None,
 # tuned-config cache: results/tuned.json
 # ---------------------------------------------------------------------------
 
+def slot_bucket(active: int, cap: int = 0) -> int:
+    """Power-of-two slot bucket for schedule-cache keying: the serving
+    engine builds one scheduled program per bucket (size token
+    ``f"b{bucket}"``) so ragged decode batches reuse cached schedules
+    instead of compiling per active-slot count. ``cap`` clamps to the
+    engine's slot capacity (0 = uncapped)."""
+    if active < 1:
+        raise ValueError(f"slot_bucket: active must be >= 1, got {active}")
+    b = 1
+    while b < active:
+        b *= 2
+    return min(b, cap) if cap else b
+
+
 def tuned_key(pattern: str, grid, ranks_per_node: Optional[int],
               size: Optional[str] = None) -> str:
     """Cache key of one (pattern, topology, message size) point. The
@@ -391,6 +405,7 @@ def resolve_config(config, pattern: str, *, grid=None,
 
 __all__ = [
     "ScheduleConfig", "AutotuneResult", "search_space", "score_config",
-    "autotune", "tuned_key", "tuned_path", "load_tuned", "save_tuned",
+    "autotune", "slot_bucket",
+    "tuned_key", "tuned_path", "load_tuned", "save_tuned",
     "tuned_record", "tuned_config", "resolve_config",
 ]

@@ -172,7 +172,8 @@ def register_pattern(name: str, *, grid_axes, default_grid, doc: str = ""):
 
 def _ensure_builtins():
     # builders live with their transports; importing registers them
-    from repro.core import broadcast, ep_a2a, halo, ring  # noqa: F401
+    from repro.core import (broadcast, ep_a2a, halo,  # noqa: F401
+                            ring, serve_decode)
 
 
 def available_patterns() -> List[str]:

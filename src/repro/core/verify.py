@@ -772,8 +772,8 @@ def verify_programs(progs: Sequence[TriggeredProgram]) -> VerifyReport:
 # per-pattern defaults for --all: small device-free builds with a node
 # mapping so the inter-link passes (pack/chunk/node_aware) have work
 _CLI_GRIDS = {"faces": (2, 2, 2), "ring": (4,), "a2a": (4,),
-              "broadcast": (2, 4)}
-_CLI_RPN = {"faces": 4, "ring": 2, "a2a": 2, "broadcast": 2}
+              "broadcast": (2, 4), "serve": (4,)}
+_CLI_RPN = {"faces": 4, "ring": 2, "a2a": 2, "broadcast": 2, "serve": 2}
 _CLI_BUILD = {"faces": {"n": (4, 4, 4)}}
 
 

@@ -2,11 +2,15 @@
 
   python -m repro.launch.report --dir results/dryrun --md
   python -m repro.launch.report --what st --dir results/st
+  python -m repro.launch.report --what serve --dir results/serve
 
 The ``st`` table reads the records ``benchmarks/faces_worker.py
 --json-dir`` writes: per-program triggered-op descriptor stats
 (puts/epoch, resource high-water mark, critical-path depth) next to the
-measured and derived times.
+measured and derived times. The ``serve`` table reads the traffic-driver
+summaries ``python -m repro.launch.traffic --out`` writes: p50/p99
+end-to-end latency, p50/p99 TTFT, and tokens/sec per run, with the
+st_mode and replica count that produced them.
 """
 from __future__ import annotations
 
@@ -123,17 +127,47 @@ def st_stats_table(recs):
     return "\n".join(rows)
 
 
+def serve_table(recs):
+    """Serving-traffic summaries (repro.launch.traffic --out records):
+    one row per run — arrival rate, replica fleet, decode routing mode,
+    latency/TTFT percentiles, and aggregate token rate. Records missing
+    a field (older drivers) render with em-dashes instead of raising."""
+    rows = ["| requests | rate/s | replicas | st_mode | drained | "
+            "lat p50 ms | lat p99 ms | ttft p50 ms | ttft p99 ms | "
+            "tok/s |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if "latency_p50_ms" not in r:
+            continue
+        st = r.get("st_mode") or "baseline"
+        rows.append(
+            f"| {r.get('requests', '—')} | "
+            f"{_num(r.get('rate'), '.0f')} | "
+            f"{r.get('replicas', '—')} | {st} | "
+            f"{'y' if r.get('queue_drained') else 'n'} | "
+            f"{_num(r.get('latency_p50_ms'), '.0f')} | "
+            f"{_num(r.get('latency_p99_ms'), '.0f')} | "
+            f"{_num(r.get('ttft_p50_ms'), '.0f')} | "
+            f"{_num(r.get('ttft_p99_ms'), '.0f')} | "
+            f"{_num(r.get('tokens_per_s'), '.1f')} |")
+    return "\n".join(rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--mesh", default=None)
     ap.add_argument("--what", default="both",
-                    choices=["both", "dryrun", "roofline", "st"])
+                    choices=["both", "dryrun", "roofline", "st", "serve"])
     args = ap.parse_args()
     recs = load_records(args.dir)
     if args.what == "st":
         print("### ST descriptor-DAG stats\n")
         print(st_stats_table(recs))
+        return
+    if args.what == "serve":
+        print("### Serving traffic (Poisson driver)\n")
+        print(serve_table(recs))
         return
     if args.what in ("both", "dryrun"):
         print("### Dry-run records\n")

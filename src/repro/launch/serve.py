@@ -2,6 +2,12 @@
 
   python -m repro.launch.serve --arch granite-3-2b --reduced \\
       --requests 8 --slots 4 --max-new 16
+
+``--st-mode st|host|fused`` routes the decode step's collectives
+through scheduled triggered-op programs (repro.serving.st_decode), one
+cached schedule per active-slot bucket; ``--st-config auto`` resolves
+each bucket's schedule from the tuned cache (autotuning on a miss),
+``--st-config default`` pins the default ScheduleConfig.
 """
 from __future__ import annotations
 
@@ -21,6 +27,16 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--moe-impl", default="dense")
+    ap.add_argument("--st-mode", default=None,
+                    choices=["st", "host", "fused"],
+                    help="route decode collectives through scheduled "
+                         "triggered-op programs (default: plain jitted "
+                         "baseline)")
+    ap.add_argument("--st-config", default="auto",
+                    help="'auto' (tuned cache), 'default', or a "
+                         "ScheduleConfig JSON object")
+    ap.add_argument("--tuned", default=None,
+                    help="tuned-cache path for --st-config auto")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -33,8 +49,18 @@ def main():
         cfg = cfg.reduced()
     rules = make_rules(cfg, None, None)
     params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    st_config = args.st_config
+    if st_config == "default":
+        from repro.core.autotune import ScheduleConfig
+        st_config = ScheduleConfig()
+    elif st_config not in ("auto",):
+        import json
+        from repro.core.autotune import ScheduleConfig
+        st_config = ScheduleConfig.from_dict(json.loads(st_config))
     eng = ServingEngine(cfg, params, rules, batch_slots=args.slots,
-                        max_len=args.max_len, moe_impl=args.moe_impl)
+                        max_len=args.max_len, moe_impl=args.moe_impl,
+                        st_mode=args.st_mode, st_config=st_config,
+                        tuned_path=args.tuned)
 
     rng = np.random.RandomState(0)
     t0 = time.time()
@@ -52,6 +78,11 @@ def main():
           f"({new_toks/max(dt,1e-9):.1f} tok/s)")
     print(f"latency p50={np.percentile(lat,50)*1e3:.0f}ms "
           f"p99={np.percentile(lat,99)*1e3:.0f}ms")
+    if args.st_mode:
+        st = eng.stats()["st"]
+        buckets = {b: m["dispatches"] for b, m in st["buckets"].items()}
+        print(f"st decode path: mode={st['mode']} pattern={st['pattern']}"
+              f" dispatches per slot bucket {buckets}")
 
 
 if __name__ == "__main__":

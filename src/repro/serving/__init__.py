@@ -1,3 +1,4 @@
 from repro.serving.engine import ServingEngine, Request
+from repro.serving.st_decode import STDecodeRouter
 
-__all__ = ["ServingEngine", "Request"]
+__all__ = ["ServingEngine", "Request", "STDecodeRouter"]

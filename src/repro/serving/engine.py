@@ -1,21 +1,36 @@
-"""Batched prefill/decode serving engine.
+"""Continuously-batched prefill/decode serving engine.
 
-Static-batch continuous serving: requests queue up, the engine fills a
-fixed batch of decode slots; a slot is recycled as soon as its sequence
-finishes (EOS or max tokens). Prefill and decode run as separately jitted
-steps (prefill writes the slot's KV range; decode appends one token for
-every active slot per step). Per-slot positions support ragged sequence
-lengths inside one batch.
+Requests queue up (FIFO deque); the engine fills a fixed batch of decode
+slots and recycles a slot as soon as its sequence finishes (EOS or max
+tokens), keeping the decode batch full under churn. Admission is
+CONTINUOUS and batched: every engine step takes as many queued requests
+as there are free slots, groups them by prompt length, and prefills each
+length group in ONE dispatch (each prefill writes all its slots' KV
+ranges via the batched prefill step). Sampling is device-side — the
+jitted steps return (B,) greedy token ids, so a decode step transfers B
+int32s instead of the full (B, 1, vocab) logits array. Per-slot
+positions support ragged sequence lengths inside one batch.
 
-This is deliberately the same step functions the dry-run lowers — the
-engine is a host-side scheduler around them.
+``st_mode`` routes the decode step's collectives — the new KV-cache row,
+the sampled token ids, and (for MoE models) the hidden block — through
+scheduled triggered-op programs of the ``"serve"`` pattern
+(repro.serving.st_decode.STDecodeRouter): one cached schedule per
+power-of-two active-slot bucket, token ids committed back THROUGH the
+transport (bit-identical to the baseline path by construction), program
+meta surfaced in :meth:`stats`. ``st_mode=None`` is the plain jitted
+baseline.
+
+Requests carry the traffic-driver timestamps: ``submitted_at`` (queue
+entry), ``admitted_at`` (prefill dispatch), ``first_token_at`` (TTFT),
+``done_at`` (completion).
 """
 from __future__ import annotations
 
 import itertools
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +38,7 @@ import numpy as np
 
 from repro.models import cache_specs
 from repro.models.params import is_spec
-from repro.train.steps import make_decode_step, make_prefill_step
+from repro.train.steps import make_decode_sample_step, make_prefill_sample_step
 
 _req_ids = itertools.count()
 
@@ -36,31 +51,81 @@ class Request:
     req_id: int = field(default_factory=lambda: next(_req_ids))
     out_tokens: List[int] = field(default_factory=list)
     submitted_at: float = field(default_factory=time.monotonic)
+    admitted_at: Optional[float] = None
+    first_token_at: Optional[float] = None
     done_at: Optional[float] = None
 
 
 class ServingEngine:
     def __init__(self, cfg, params, rules, *, batch_slots: int = 4,
-                 max_len: int = 256, moe_impl: str = "dense"):
+                 max_len: int = 256, moe_impl: str = "dense",
+                 st_mode: Optional[str] = None, st_config="auto",
+                 tuned_path: Optional[str] = None,
+                 ranks_per_node: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.rules = rules
         self.B = batch_slots
         self.max_len = max_len
-        self._prefill_one = jax.jit(
-            make_prefill_step(cfg, rules, max_len=max_len, moe_impl=moe_impl))
-        self._decode = jax.jit(
-            make_decode_step(cfg, rules, moe_impl=moe_impl),
+        self._prefill_sample = jax.jit(
+            make_prefill_sample_step(cfg, rules, max_len=max_len,
+                                     moe_impl=moe_impl))
+        self._decode_sample = jax.jit(
+            make_decode_sample_step(cfg, rules, moe_impl=moe_impl),
             donate_argnums=(2,))
         cspecs = cache_specs(cfg, batch_slots, max_len)
         self.cache = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype), cspecs, is_leaf=is_spec)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.slot_pos = np.zeros(batch_slots, np.int32)
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = deque()
         self.completed: List[Request] = []
+        self.prefill_dispatches = 0
+        self.decode_steps = 0
+        self.tokens_generated = 0
+        self.st_mode = st_mode
+        self._router = None
+        self._extract = None
+        if st_mode is not None:
+            from repro.serving.st_decode import STDecodeRouter
+            self._kv_leaf = self._find_kv_leaf()
+            moe = getattr(cfg, "moe", None) is not None
+            self._router = STDecodeRouter(
+                kv_dim=self._kv_leaf[2], d_model=cfg.d_model, moe=moe,
+                slot_cap=batch_slots, mode=st_mode, config=st_config,
+                tuned_path=tuned_path, ranks_per_node=ranks_per_node)
+            self._extract = jax.jit(self._make_extractor())
 
-    # -- admission -----------------------------------------------------------
+    # -- ST payload extraction ------------------------------------------------
+    def _find_kv_leaf(self):
+        """Locate the first KV-cache leaf carrying the sequence axis:
+        prefix-layer leaves are (B, max_len, ...), scanned-unit leaves
+        carry a leading layer axis (L, B, max_len, ...). Returns
+        (part, leaf index, flattened per-row payload width)."""
+        for part, seq_axis in (("prefix", 1), ("unit", 2)):
+            for i, lf in enumerate(jax.tree.leaves(self.cache[part])):
+                if (lf.ndim > seq_axis and lf.shape[seq_axis] == self.max_len
+                        and lf.shape[seq_axis - 1] == self.B):
+                    width = int(np.prod(lf.shape[seq_axis + 1:], dtype=int))
+                    return part, i, max(width, 1)
+        raise ValueError("serving: no KV-cache leaf with a "
+                         f"(batch, {self.max_len}) sequence axis found")
+
+    def _make_extractor(self):
+        part, idx, _ = self._kv_leaf
+
+        def extract(cache, pos):
+            """(B,) positions -> (B, width) f32: the cache rows the last
+            decode step wrote, flattened — the per-slot KV payload the
+            serve program mirrors to the replica's peers."""
+            lf = jax.tree.leaves(cache[part])[idx]
+            x = lf if part == "prefix" else lf[0]     # (B, max_len, ...)
+            rows = x[jnp.arange(x.shape[0]), pos]
+            return rows.reshape(x.shape[0], -1).astype(jnp.float32)
+
+        return extract
+
+    # -- admission ------------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
 
@@ -68,15 +133,25 @@ class ServingEngine:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
     def _admit(self):
-        """Prefill queued requests into free slots (one at a time: each
-        prefill writes one slot's KV range via the batched prefill step)."""
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            req = self.queue.pop(0)
-            L = len(req.prompt)
+        """Fill free slots from the queue: take requests FIFO, group by
+        prompt length, and prefill each length group in ONE dispatch
+        (the batched prefill writes every group slot's KV range)."""
+        free = self._free_slots()
+        if not free or not self.queue:
+            return
+        take: List[Request] = []
+        while self.queue and len(take) < len(free):
+            take.append(self.queue.popleft())
+        groups: Dict[int, List[Request]] = {}
+        for req in take:
+            groups.setdefault(len(req.prompt), []).append(req)
+        free_iter = iter(free)
+        for L in sorted(groups):
+            reqs = groups[L]
+            slots = [next(free_iter) for _ in reqs]
             toks = np.zeros((self.B, L), np.int32)
-            toks[slot] = req.prompt
+            for slot, req in zip(slots, reqs):
+                toks[slot] = req.prompt
             batch = {"tokens": jnp.asarray(toks),
                      "positions": jnp.broadcast_to(
                          jnp.arange(L, dtype=jnp.int32), (self.B, L))}
@@ -84,22 +159,38 @@ class ServingEngine:
                 batch["vision"] = jnp.zeros(
                     (self.B, self.cfg.vision.num_tokens,
                      self.cfg.vision.raw_dim), jnp.float32)
-            logits, new_cache = self._prefill_one(self.params, batch)
-            # merge ONLY this slot's cache rows (other slots keep theirs).
-            # prefix-layer leaves are (B, ...); scanned-unit leaves carry a
-            # leading layer axis (L, B, ...), so batch is dim 1 there.
+            ids, new_cache = self._prefill_sample(self.params, batch)
+            self.prefill_dispatches += 1
+            # merge ONLY the group's cache rows (other slots keep
+            # theirs). prefix-layer leaves are (B, ...); scanned-unit
+            # leaves carry a leading layer axis (L, B, ...), so batch is
+            # dim 1 there.
+            idx = jnp.asarray(np.array(slots, np.int32))
             self.cache = {
                 "prefix": jax.tree.map(
-                    lambda old, new: old.at[slot].set(new[slot]),
+                    lambda old, new: old.at[idx].set(new[idx]),
                     self.cache["prefix"], new_cache["prefix"]),
                 "unit": jax.tree.map(
-                    lambda old, new: old.at[:, slot].set(new[:, slot]),
+                    lambda old, new: old.at[:, idx].set(new[:, idx]),
                     self.cache["unit"], new_cache["unit"]),
             }
-            nxt = int(np.argmax(np.asarray(logits)[slot, -1]))
-            req.out_tokens.append(nxt)
-            self.slot_req[slot] = req
-            self.slot_pos[slot] = L
+            ids_np = np.asarray(ids)
+            now = time.monotonic()
+            for slot, req in zip(slots, reqs):
+                req.out_tokens.append(int(ids_np[slot]))
+                req.admitted_at = now
+                req.first_token_at = now
+                self.slot_req[slot] = req
+                self.slot_pos[slot] = L
+                self.tokens_generated += 1
+                # a one-token (or instant-EOS) request completes at
+                # admission — don't hold a decode slot for it
+                if (len(req.out_tokens) >= req.max_new_tokens
+                        or req.out_tokens[-1] == req.eos_id
+                        or self.slot_pos[slot] >= self.max_len - 1):
+                    req.done_at = now
+                    self.completed.append(req)
+                    self.slot_req[slot] = None
 
     # -- decode loop ----------------------------------------------------------
     def _active(self):
@@ -120,12 +211,28 @@ class ServingEngine:
             batch["vision"] = jnp.zeros(
                 (self.B, self.cfg.vision.num_tokens,
                  self.cfg.vision.raw_dim), jnp.float32)
-        logits, self.cache = self._decode(self.params, batch, self.cache)
-        lg = np.asarray(logits)[:, 0, :self.cfg.vocab_size]
+        pos_written = self.slot_pos.copy()      # rows this decode writes
+        ids, hid, self.cache = self._decode_sample(self.params, batch,
+                                                   self.cache)
+        self.decode_steps += 1
+        ids_np = np.asarray(ids)
+        if self._router is not None:
+            act = np.asarray(active, np.int32)
+            payload = np.asarray(
+                self._extract(self.cache, jnp.asarray(pos_written)))[act]
+            hid_np = (np.asarray(hid)[act]
+                      if self._router.moe_on else None)
+            committed, _, _ = self._router.dispatch(payload, ids_np[act],
+                                                    hid=hid_np)
+            # the transported ids are authoritative: serving reads its
+            # tokens off the committed window buffer
+            ids_np = ids_np.copy()
+            ids_np[act] = committed
         for i in active:
             req = self.slot_req[i]
-            nxt = int(np.argmax(lg[i]))
+            nxt = int(ids_np[i])
             req.out_tokens.append(nxt)
+            self.tokens_generated += 1
             self.slot_pos[i] += 1
             done = (len(req.out_tokens) >= req.max_new_tokens
                     or nxt == req.eos_id
@@ -142,3 +249,16 @@ class ServingEngine:
             self.step()
             steps += 1
         return steps
+
+    # -- reporting ------------------------------------------------------------
+    def stats(self) -> dict:
+        d = {"batch_slots": self.B, "max_len": self.max_len,
+             "queued": len(self.queue), "active": len(self._active()),
+             "completed": len(self.completed),
+             "prefill_dispatches": self.prefill_dispatches,
+             "decode_steps": self.decode_steps,
+             "tokens_generated": self.tokens_generated,
+             "st_mode": self.st_mode}
+        if self._router is not None:
+            d["st"] = self._router.stats()
+        return d

@@ -146,3 +146,43 @@ def make_decode_step(cfg, rules, moe_impl: str = "gshard",
         return logits, new_cache
 
     return decode_step
+
+
+def _greedy_ids(cfg, logits):
+    """(B, 1, V) last-position logits -> (B,) greedy token ids. The
+    argmax runs device-side so serving transfers B int32 ids per step
+    instead of the full (B, 1, vocab) logits array."""
+    return jnp.argmax(logits[:, -1, :cfg.vocab_size],
+                      axis=-1).astype(jnp.int32)
+
+
+def make_prefill_sample_step(cfg, rules, max_len: Optional[int] = None,
+                             moe_impl: str = "gshard",
+                             unroll: bool = False):
+    """prefill_sample_step(params, batch) -> (ids (B,), cache): prefill
+    plus device-side greedy sampling of each slot's first token."""
+    step = make_prefill_step(cfg, rules, max_len=max_len,
+                             moe_impl=moe_impl, unroll=unroll)
+
+    def prefill_sample_step(params, batch):
+        logits, cache = step(params, batch)
+        return _greedy_ids(cfg, logits), cache
+
+    return prefill_sample_step
+
+
+def make_decode_sample_step(cfg, rules, moe_impl: str = "gshard",
+                            unroll: bool = False):
+    """decode_sample_step(params, batch, cache) -> (ids (B,), hid (B, D),
+    new_cache): one decode step plus device-side greedy sampling. The
+    last-position hidden block rides along as the MoE-dispatch payload
+    of the ST serving path (ignored by the baseline)."""
+
+    def decode_sample_step(params, batch, cache):
+        x, new_cache, _ = forward(cfg, params, batch, rules=rules,
+                                  cache=cache, moe_impl=moe_impl,
+                                  unroll=unroll)
+        logits = logits_from_hidden(cfg, params, x, rules, last_only=True)
+        return _greedy_ids(cfg, logits), x[:, -1, :], new_cache
+
+    return decode_sample_step
